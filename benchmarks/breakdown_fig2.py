@@ -1,0 +1,39 @@
+"""Fig. 2 reproduction: system-vs-user CPU-time breakdown per configuration.
+
+The paper's finding: Uprobes incurs more *system* time than USDT (kernel
+trampolines), while USDT's cost stays in user time.  Our analogue: host
+callbacks (the uprobe trap) cross the runtime boundary and synchronise
+threads — kernel-side work — while the USDT tape is pure device-graph
+compute (user time).
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.overhead_table1 import bench_microbench
+
+
+def run(fast: bool = False) -> dict:
+    rows = bench_microbench(warmup=30, runs=200) if fast else bench_microbench()
+    base = rows[0]
+    print("== Fig 2 analogue: sys/user split over the measured phase ==")
+    print(f"{'type':<12} {'user(s)':>8} {'sys(s)':>8} {'Δuser':>8} {'Δsys':>8}")
+    out = []
+    for r in rows:
+        du, ds = r.user_s - base.user_s, r.system_s - base.system_s
+        print(f"{r.label:<12} {r.user_s:>8.2f} {r.system_s:>8.2f} {du:>+8.2f} {ds:>+8.2f}")
+        out.append(
+            {"label": r.label, "user_s": r.user_s, "system_s": r.system_s,
+             "delta_user_s": du, "delta_system_s": ds}
+        )
+    return {"rows": out}
+
+
+def main() -> None:
+    rec = run()
+    with open("benchmarks/out_breakdown_fig2.json", "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

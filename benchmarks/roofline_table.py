@@ -1,0 +1,69 @@
+"""Roofline table: render §Roofline from dry-run records.
+
+Reads the JSONL written by ``repro.launch.dryrun --all --out <file>`` (the
+40-cell baseline sweep) and prints the per-(arch × shape) three-term table
+with bottleneck + useful-FLOPs ratio.  Does NOT launch the dry-run itself
+(512 placeholder devices must stay out of this process); benchmarks/run.py
+invokes the sweep as a subprocess when records are missing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "out_dryrun_single_pod.jsonl")
+
+
+def load(path: str) -> list[dict]:
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"])] = r  # last record wins
+    return list(recs.values())
+
+
+def render(recs: list[dict]) -> str:
+    lines = []
+    hdr = (
+        f"{'arch':<18} {'shape':<12} {'bneck':<10} {'t_comp(s)':>10} {'t_mem(s)':>10} "
+        f"{'t_coll(s)':>10} {'useful':>7} {'roofline':>8}"
+    )
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(recs, key=lambda r: (r["arch"], order.get(r["shape"], 9))):
+        if r["status"] == "skip":
+            lines.append(f"{r['arch']:<18} {r['shape']:<12} SKIP ({r['reason'][:70]}…)")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:<18} {r['shape']:<12} FAIL {r.get('error','')[:70]}")
+            continue
+        lines.append(
+            f"{r['arch']:<18} {r['shape']:<12} {r['bottleneck']:<10} "
+            f"{r['t_compute_s']:>10.4f} {r['t_memory_s']:>10.4f} {r['t_collective_s']:>10.4f} "
+            f"{r.get('useful_flops_ratio', 0) or 0:>7.3f} "
+            f"{r.get('roofline_fraction', 0) or 0:>8.4f}"
+        )
+    return "\n".join(lines)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else DEFAULT_PATH
+    if not os.path.exists(path):
+        print(f"no dry-run records at {path}; run:\n"
+              f"  PYTHONPATH=src python -m repro.launch.dryrun --all --out {path}")
+        raise SystemExit(1)
+    recs = load(path)
+    print(render(recs))
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    fail = [r for r in recs if r["status"] not in ("ok", "skip")]
+    print(f"\ncells: {len(ok)} ok, {len(skip)} documented skips, {len(fail)} failures")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Checkpoint substrate: sharded npz + manifest, async save, elastic restore."""
+
+from repro.checkpoint.store import (  # noqa: F401
+    AsyncCheckpointer,
+    latest_step,
+    restore,
+    save,
+)

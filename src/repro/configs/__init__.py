@@ -1,0 +1,59 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (
+    SHAPES,
+    LayerSpec,
+    MambaConfig,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    ShapeConfig,
+    reduced,
+    supports_shape,
+)
+
+_ARCH_MODULES = {
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "jamba-1.5-large": "repro.configs.jamba_1_5_large",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "rwkv6-7b": "repro.configs.rwkv6_7b",
+}
+
+
+def list_archs() -> list[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+__all__ = [
+    "SHAPES",
+    "LayerSpec",
+    "MambaConfig",
+    "ModelConfig",
+    "MoEConfig",
+    "RWKVConfig",
+    "ShapeConfig",
+    "get_config",
+    "get_shape",
+    "list_archs",
+    "reduced",
+    "supports_shape",
+]

@@ -1,0 +1,25 @@
+"""chameleon-34b [vlm]: early-fusion over VQ image tokens.
+
+[arXiv:2405.09818; unverified] — 48L d_model=8192 64H (GQA kv=8) d_ff=22016
+vocab=65536.  QK-norm (the paper's divergence fix).  The VQ-VAE image
+tokenizer is a STUB per the assignment: input_specs() provides precomputed
+token ids whose vocabulary includes the image-token span.
+"""
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    layer_pattern=(LayerSpec("ga"),),
+    qk_norm=True,
+    tied_embeddings=False,
+    frontend="vlm_stub",
+    act="silu",
+)

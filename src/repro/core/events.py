@@ -1,0 +1,79 @@
+"""Lifecycle event tracing — the thread/process spawn-exit analogue.
+
+Adaptyst's third profiling type is "tracing of spawning and exiting
+threads/processes of a given program".  The unit of concurrency in this
+framework is not an OS thread: it is the training step, the microbatch, the
+checkpoint writer and the serving request.  This module records their
+spawn/exit events on the host with monotonic timestamps, and is the sink for
+uprobe-style host callbacks (repro.core.uprobes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from contextlib import contextmanager
+from typing import Any, Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    t: float  # monotonic seconds
+    kind: str  # spawn | exit | probe | mark
+    name: str  # e.g. "step", "microbatch", "request", probe target
+    payload: Any = None
+
+
+class EventLog:
+    """Thread-safe append-only event log (the eBPF ring-buffer analogue)."""
+
+    def __init__(self) -> None:
+        self._events: list[Event] = []
+        self._lock = threading.Lock()
+
+    def record(self, kind: str, name: str, payload: Any = None) -> None:
+        ev = Event(time.monotonic(), kind, name, payload)
+        with self._lock:
+            self._events.append(ev)
+
+    @contextmanager
+    def lifecycle(self, name: str, payload: Any = None) -> Iterator[None]:
+        """spawn/exit bracket for a step / microbatch / request."""
+        self.record("spawn", name, payload)
+        try:
+            yield
+        finally:
+            self.record("exit", name, payload)
+
+    def events(self, kind: str | None = None, name: str | None = None) -> list[Event]:
+        with self._lock:
+            evs = list(self._events)
+        if kind is not None:
+            evs = [e for e in evs if e.kind == kind]
+        if name is not None:
+            evs = [e for e in evs if e.name == name]
+        return evs
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._events)
+
+    def durations(self, name: str) -> list[float]:
+        """Pair spawn/exit events (stack-matched) into durations."""
+        out: list[float] = []
+        stack: list[float] = []
+        for e in self.events(name=name):
+            if e.kind == "spawn":
+                stack.append(e.t)
+            elif e.kind == "exit" and stack:
+                out.append(e.t - stack.pop())
+        return out
+
+
+# Global default log (like the kernel's shared perf buffer); components may
+# construct private logs for isolation.
+GLOBAL_LOG = EventLog()

@@ -1,0 +1,100 @@
+"""Instrumentation-overhead harness — the hyperfine methodology (Table I/Fig 2).
+
+Reproduces the paper's measurement protocol exactly: N warm-up runs, M
+measured runs, mean/stddev/median/min/max wall-time, plus the system-vs-user
+CPU-time breakdown (Fig. 2) from getrusage — on the CPU backend the jitted
+computation runs in-process, so *user* time is device-execute work and
+*system* time captures the kernel-side cost of host traps (callbacks,
+thread synchronisation), mirroring how uprobes' kernel trampolines showed up
+as system time in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import resource
+import time
+from typing import Any, Callable
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingStats:
+    label: str
+    runs: int
+    mean_ms: float
+    stddev_ms: float
+    median_ms: float
+    min_ms: float
+    max_ms: float
+    user_s: float  # Σ user CPU time over the measured phase
+    system_s: float  # Σ system CPU time over the measured phase
+
+    def row(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def overhead_vs(self, base: "TimingStats") -> float:
+        """Relative mean-walltime overhead (the paper's +5.1% / +4.8%)."""
+        return self.mean_ms / base.mean_ms - 1.0
+
+
+def hyperfine(
+    fn: Callable[[], Any],
+    *,
+    label: str = "",
+    warmup: int = 100,
+    runs: int = 1000,
+) -> TimingStats:
+    """Benchmark ``fn`` (hyperfine protocol: 100 warm-up + 1000 measured).
+
+    ``fn`` must be self-contained (compiled function + bound inputs) and is
+    blocked to completion each run.
+    """
+
+    def once():
+        out = fn()
+        jax.block_until_ready(out)
+
+    for _ in range(warmup):
+        once()
+    samples: list[float] = []
+    ru0 = resource.getrusage(resource.RUSAGE_SELF)
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        once()
+        samples.append((time.perf_counter() - t0) * 1e3)
+    ru1 = resource.getrusage(resource.RUSAGE_SELF)
+    s = sorted(samples)
+    n = len(s)
+    mean = sum(s) / n
+    var = sum((x - mean) ** 2 for x in s) / max(n - 1, 1)
+    median = s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+    return TimingStats(
+        label=label,
+        runs=n,
+        mean_ms=mean,
+        stddev_ms=math.sqrt(var),
+        median_ms=median,
+        min_ms=s[0],
+        max_ms=s[-1],
+        user_s=ru1.ru_utime - ru0.ru_utime,
+        system_s=ru1.ru_stime - ru0.ru_stime,
+    )
+
+
+def table(rows: list[TimingStats], baseline: str = "baseline") -> str:
+    """Render the Table-I-style report (+ Fig-2 sys/user columns)."""
+    base = next((r for r in rows if r.label == baseline), rows[0])
+    header = (
+        f"{'type':<12} {'mean(ms)':>9} {'stddev':>8} {'median':>8} {'min':>8} "
+        f"{'max':>8} {'overhead':>9} {'user(s)':>8} {'sys(s)':>8}"
+    )
+    lines = [header, "-" * len(header)]
+    for r in rows:
+        ov = r.overhead_vs(base)
+        lines.append(
+            f"{r.label:<12} {r.mean_ms:>9.3f} {r.stddev_ms:>8.3f} {r.median_ms:>8.3f} "
+            f"{r.min_ms:>8.3f} {r.max_ms:>8.3f} {ov:>8.1%} {r.user_s:>8.2f} {r.system_s:>8.2f}"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,252 @@
+"""Stateful-dataflow-multigraph IR extraction + backend assignment (Fig. 1).
+
+Adaptyst represents a program as an SDFG whose nodes are each assigned to a
+*backend module* modelling one system component.  Here the program IR is the
+**jaxpr** (JAX's dataflow multigraph) and the components are the TPU
+sub-units:
+
+    MXU   systolic matmul units        (dot_general, conv)
+    VPU   vector units                 (elementwise, reductions, RNG)
+    HBM   memory movers                (gather/scatter/slice/transpose/copy…)
+    ICI   interconnect                 (explicit collectives: psum, all_gather…)
+    HOST  host link                    (callbacks, infeed — the "system" side)
+
+Every equation becomes a node with FLOP and byte estimates; nodes group into
+*regions* by named_scope (the paper's "arbitrarily-sized code blocks"), and
+each region gets a roofline *match*: the component class that bounds it
+(compute- vs memory-bound via arithmetic intensity against the chip's machine
+balance — the cache-aware-roofline decision, one level up the hierarchy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.hw.specs import ChipSpec, default_chip
+
+MXU, VPU, HBM, ICI, HOST = "MXU", "VPU", "HBM", "ICI", "HOST"
+
+_MXU_PRIMS = {"dot_general", "conv_general_dilated", "ragged_dot"}
+_ICI_PRIMS = {
+    "psum", "all_gather", "all_to_all", "ppermute", "psum_scatter", "pmax", "pmin",
+    "reduce_scatter", "collective_permute",
+}
+_HOST_PRIMS = {"debug_callback", "io_callback", "pure_callback", "infeed", "outfeed"}
+_HBM_PRIMS = {
+    "gather", "scatter", "scatter_add", "dynamic_slice", "dynamic_update_slice",
+    "slice", "concatenate", "transpose", "reshape", "broadcast_in_dim", "copy",
+    "pad", "rev", "squeeze", "iota", "convert_element_type", "bitcast_convert_type",
+    "select_n", "take",
+}
+
+
+def _aval_bytes(v) -> int:
+    aval = v.aval
+    if not hasattr(aval, "shape"):
+        return 0
+    return int(np.prod(aval.shape, dtype=np.int64)) * np.dtype(aval.dtype).itemsize
+
+
+def _aval_size(v) -> int:
+    aval = v.aval
+    return int(np.prod(aval.shape, dtype=np.int64)) if hasattr(aval, "shape") else 0
+
+
+@dataclasses.dataclass
+class Node:
+    id: int
+    primitive: str
+    backend: str
+    flops: float
+    bytes: float
+    region: str  # innermost named_scope path
+    params: dict = dataclasses.field(default_factory=dict, repr=False)
+
+
+@dataclasses.dataclass
+class Edge:
+    src: int
+    dst: int
+    bytes: float
+
+
+@dataclasses.dataclass
+class Region:
+    """A named_scope code block with aggregate roofline terms."""
+
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    nodes: int = 0
+    backends: dict = dataclasses.field(default_factory=lambda: defaultdict(float))
+
+    def intensity(self) -> float:
+        return self.flops / max(self.bytes, 1.0)
+
+    def match(self, chip: Optional[ChipSpec] = None) -> str:
+        """The Adaptyst 'match': which component bounds this region."""
+        chip = chip or default_chip()
+        if self.backends.get(HOST):
+            return HOST
+        if self.backends.get(ICI, 0.0) > 0.5 * self.bytes:
+            return ICI
+        balance = chip.peak_flops_bf16 / chip.hbm_bw  # FLOP/byte machine balance
+        if self.intensity() >= balance and self.backends.get(MXU):
+            return MXU
+        if self.backends.get(MXU, 0.0) > 0.5 * self.flops:
+            # matmul-heavy but HBM-bound at this size
+            return HBM
+        return VPU if self.flops > self.bytes else HBM
+
+
+def classify(prim_name: str) -> str:
+    if prim_name in _MXU_PRIMS:
+        return MXU
+    if prim_name in _ICI_PRIMS:
+        return ICI
+    if prim_name in _HOST_PRIMS:
+        return HOST
+    if prim_name in _HBM_PRIMS:
+        return HBM
+    return VPU
+
+
+def _eqn_flops(eqn) -> float:
+    name = eqn.primitive.name
+    out_size = sum(_aval_size(v) for v in eqn.outvars)
+    if name == "dot_general":
+        dims = eqn.params["dimension_numbers"]
+        (lc, _rc), (lb, _rb) = dims
+        lhs = eqn.invars[0].aval
+        k = int(np.prod([lhs.shape[i] for i in lc], dtype=np.int64))
+        return 2.0 * out_size * k
+    if name == "conv_general_dilated":
+        rhs = eqn.invars[1].aval
+        return 2.0 * out_size * int(np.prod(rhs.shape[1:], dtype=np.int64))
+    if classify(name) in (HBM, HOST, ICI):
+        return 0.0
+    if name.startswith("reduce_") or name in ("argmax", "argmin", "cumsum", "cumprod",
+                                              "cummax", "cummin", "sort"):
+        # reductions/scans: ~1 flop per input element
+        return float(sum(_aval_size(v) for v in eqn.invars if hasattr(v, "aval")))
+    # elementwise: ~1 flop per output element
+    return float(out_size)
+
+
+def _eqn_bytes(eqn) -> float:
+    ins = sum(_aval_bytes(v) for v in eqn.invars if hasattr(v, "aval"))
+    outs = sum(_aval_bytes(v) for v in eqn.outvars)
+    return float(ins + outs)
+
+
+@dataclasses.dataclass
+class SDFG:
+    nodes: list[Node]
+    edges: list[Edge]
+
+    def regions(self) -> dict[str, Region]:
+        regs: dict[str, Region] = {}
+        for n in self.nodes:
+            r = regs.setdefault(n.region, Region(n.region))
+            r.flops += n.flops
+            r.bytes += n.bytes
+            r.nodes += 1
+            r.backends[n.backend] += n.flops if n.backend == MXU else n.bytes
+        return regs
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        """Aggregate flops/bytes/node-count per backend component."""
+        out: dict[str, dict[str, float]] = {
+            b: {"flops": 0.0, "bytes": 0.0, "nodes": 0} for b in (MXU, VPU, HBM, ICI, HOST)
+        }
+        for n in self.nodes:
+            out[n.backend]["flops"] += n.flops
+            out[n.backend]["bytes"] += n.bytes
+            out[n.backend]["nodes"] += 1
+        return out
+
+    def to_dot(self, max_nodes: int = 200) -> str:
+        colors = {MXU: "tomato", VPU: "gold", HBM: "skyblue", ICI: "violet", HOST: "gray"}
+        lines = ["digraph sdfg {", "  rankdir=TB;"]
+        for n in self.nodes[:max_nodes]:
+            lines.append(
+                f'  n{n.id} [label="{n.primitive}\\n{n.backend}" '
+                f'style=filled fillcolor={colors[n.backend]}];'
+            )
+        shown = {n.id for n in self.nodes[:max_nodes]}
+        for e in self.edges:
+            if e.src in shown and e.dst in shown:
+                lines.append(f"  n{e.src} -> n{e.dst};")
+        lines.append("}")
+        return "\n".join(lines)
+
+
+def extract(fn: Callable, *args, flatten_control_flow: bool = True, **kwargs) -> SDFG:
+    """Trace ``fn`` and build its SDFG.
+
+    Control-flow primitives (scan/while/cond/pjit/remat) are descended into
+    when ``flatten_control_flow`` — body nodes appear once with a trip-count
+    multiplier on their costs (scan length), mirroring how Adaptyst models a
+    loop as its block × iterations.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    nodes: list[Node] = []
+    edges: list[Edge] = []
+    producer: dict[Any, int] = {}
+    counter = [0]
+
+    def scope_of(eqn) -> str:
+        try:
+            s = str(eqn.source_info.name_stack)
+            return s if s else "<toplevel>"
+        except AttributeError:
+            return "<toplevel>"
+
+    def visit(jaxpr, mult: float, region_prefix: str):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            inner = None
+            inner_mult = mult
+            if flatten_control_flow:
+                if name == "scan":
+                    inner = eqn.params["jaxpr"].jaxpr
+                    inner_mult = mult * eqn.params["length"]
+                elif name == "while":
+                    inner = eqn.params["body_jaxpr"].jaxpr  # trip count unknown: ×1
+                elif name == "cond":
+                    inner = eqn.params["branches"][0].jaxpr
+                elif name in ("pjit", "jit", "remat2", "checkpoint", "custom_vjp_call",
+                              "custom_jvp_call", "custom_vjp_call_jaxpr"):
+                    p = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                    if p is not None:
+                        inner = p.jaxpr if hasattr(p, "jaxpr") else p
+            if inner is not None:
+                visit(inner, inner_mult, region_prefix)
+                continue
+            nid = counter[0]
+            counter[0] += 1
+            region = region_prefix + scope_of(eqn)
+            nodes.append(
+                Node(
+                    id=nid,
+                    primitive=name,
+                    backend=classify(name),
+                    flops=_eqn_flops(eqn) * mult,
+                    bytes=_eqn_bytes(eqn) * mult,
+                    region=region,
+                )
+            )
+            for v in eqn.invars:
+                if type(v).__name__ == "Literal":
+                    continue
+                if v in producer:
+                    edges.append(Edge(producer[v], nid, _aval_bytes(v)))
+            for v in eqn.outvars:
+                producer[v] = nid
+
+    visit(closed.jaxpr, 1.0, "")
+    return SDFG(nodes, edges)

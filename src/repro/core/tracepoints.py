@@ -1,0 +1,140 @@
+"""Static tracepoints — the USDT analogue.
+
+USDT (User-Static-Defined-Tracing) probes are markers compiled into the
+binary: a nop + ELF note when disabled, an eBPF-visible event when a consumer
+enables the semaphore.  The TPU translation:
+
+* ``tp.point(name, value)`` is written into the model/step source (static —
+  requires a source marker, exactly like USDT's ``DTRACE_PROBE``).
+* When tracing is **disabled** the marker is a Python no-op at trace time, so
+  the jitted program is *byte-identical* to the uninstrumented one (tested in
+  tests/test_tracepoints.py) — this is even stronger than USDT's nop-sled.
+* When **enabled in "tape" mode** the values flow through a functional tape
+  that becomes an extra output of the jitted step: the cost is a handful of
+  device-side scalar ops ("user time", like USDT's inline fire).
+* When **enabled in "callback" mode** the marker emits a host callback — that
+  is the kernel-trap-style mechanism shared with uprobes, and shows up as
+  host/"system" time in the overhead study (benchmarks/overhead_table1.py).
+
+The tape is trace-time thread-local state, so ``collect`` must wrap the
+function *inside* jit (or be jitted itself).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from functools import wraps
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.events import GLOBAL_LOG, EventLog
+
+_STATE = threading.local()
+
+
+def _state():
+    if not hasattr(_STATE, "mode"):
+        _STATE.mode = None  # None | "tape" | "callback"
+        _STATE.tape = None
+        _STATE.log = GLOBAL_LOG
+    return _STATE
+
+
+def tracing_enabled() -> bool:
+    return _state().mode is not None
+
+
+@contextmanager
+def enable(mode: str = "tape", log: EventLog | None = None) -> Iterator[None]:
+    """Enable tracepoints for functions *traced* within this context.
+
+    Like flipping the USDT semaphore: jit-compilation performed inside sees
+    the markers; compilation outside does not.
+    """
+    if mode not in ("tape", "callback"):
+        raise ValueError(f"mode must be 'tape' or 'callback', got {mode!r}")
+    st = _state()
+    prev = (st.mode, st.tape, st.log)
+    st.mode = mode
+    st.log = GLOBAL_LOG if log is None else log  # (EventLog is falsy when empty)
+    try:
+        yield
+    finally:
+        st.mode, st.tape, st.log = prev
+
+
+def point(name: str, value: jax.typing.ArrayLike | None = None, agg: str = "last") -> None:
+    """A static tracepoint.  No-op (compiled away) unless tracing is enabled.
+
+    agg: how repeated fires of the same point combine on the tape —
+    "last" | "sum" | "max" | "count".
+    """
+    st = _state()
+    if st.mode is None:
+        return
+    if value is None:
+        value = jnp.int32(1)
+        agg = "count" if agg == "last" else agg
+    value = jnp.asarray(value)
+    if st.mode == "callback":
+        log = st.log
+
+        def _sink(v, _name=name, _log=log):
+            _log.record("probe", _name, v)
+
+        jax.debug.callback(_sink, value)
+        return
+    # tape mode
+    if st.tape is None:
+        # point() fired outside collect(): aggregate into a throwaway tape so
+        # instrumented libraries still work when the caller forgot collect().
+        st.tape = {}
+    tape = st.tape
+    scalar = value if value.ndim == 0 else _summarize(value)
+    if name not in tape:
+        tape[name] = (scalar, jnp.int32(1)) if agg != "count" else (jnp.int32(1), jnp.int32(1))
+        return
+    old, n = tape[name]
+    if agg == "last":
+        new = scalar
+    elif agg == "sum":
+        new = old + scalar
+    elif agg == "max":
+        new = jnp.maximum(old, scalar)
+    elif agg == "count":
+        new = old + jnp.int32(1)
+    else:
+        raise ValueError(f"unknown agg {agg!r}")
+    tape[name] = (new, n + jnp.int32(1))
+
+
+def _summarize(value: jax.Array) -> jax.Array:
+    # Tracepoints carry scalars (USDT argument registers); reduce arrays.
+    return jnp.mean(value.astype(jnp.float32))
+
+
+def collect(fn: Callable) -> Callable:
+    """Wrap ``fn`` so it returns ``(out, tape)`` when tape-tracing is enabled.
+
+    The tape is a dict {point_name: (value, fire_count)} of device scalars —
+    it is part of the jitted computation (functional, donate-safe).
+    When tracing is disabled, returns ``(out, {})``.
+    """
+
+    @wraps(fn)
+    def wrapped(*args: Any, **kwargs: Any):
+        st = _state()
+        if st.mode != "tape":
+            return fn(*args, **kwargs), {}
+        prev = st.tape
+        st.tape = {}
+        try:
+            out = fn(*args, **kwargs)
+            tape = st.tape
+        finally:
+            st.tape = prev
+        return out, tape
+
+    return wrapped

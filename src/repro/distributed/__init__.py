@@ -1,0 +1,1 @@
+"""Distribution layer: mesh construction + logical-axis sharding rules."""

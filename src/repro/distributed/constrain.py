@@ -1,0 +1,28 @@
+"""Activation sharding constraints by logical axis names (mesh-optional).
+
+``constrain(x, "batch", "seq", "heads", "head_dim")`` applies a
+with_sharding_constraint built from ACT_RULES against the ambient mesh —
+divisibility-safe (a non-divisible mapping is dropped per-dim, same policy as
+parameter sharding), and a no-op when no mesh is active (CPU unit tests).
+"""
+from __future__ import annotations
+
+import jax
+from jax.interpreters import pxla
+from jax.sharding import NamedSharding
+
+from repro.distributed.sharding import ACT_RULES, spec_for
+from repro.nn.core import axes_str
+
+
+def _ambient_mesh():
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def constrain(x: jax.Array, *axes: str | None, rules: dict | None = None) -> jax.Array:
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    spec = spec_for(tuple(x.shape), axes_str(tuple(axes)), rules or ACT_RULES, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,211 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style, divisibility-safe).
+
+Every parameter / activation / cache leaf carries logical axis names (see
+repro.nn.core.AxesFactory).  A *rule set* maps logical names to mesh axes:
+
+  * ``data``  doubles as the FSDP axis: parameter 'embed'/'mlp'-class dims are
+    sharded over it (ZeRO-3), all-gathered per scanned block.
+  * ``model`` is the TP/EP axis: heads, ffn width, vocab, experts.
+  * ``pod``   is the DCN axis: pure data parallelism (batch) — parameters are
+    replicated across pods so weight all-gathers never cross DCN.
+
+Divisibility fallback: a mapping is *dropped per-leaf* when the dim size is
+not divisible by the mesh axis (e.g. smollm's 15 heads on a 16-way model
+axis ⇒ attention params stay replicated on 'model' while its FFN shards).
+This is what makes one rule set serve 10 heterogeneous architectures; the
+roofline report surfaces the cost of any dropped mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.core import parse_axes
+
+PyTree = Any
+
+# Rule sets: logical axis -> mesh axis (or tuple of mesh axes).
+# fmt: off
+PARAM_RULES: dict[str, Any] = {
+    "vocab":      "model",   # TP: embedding/unembedding vocab-sharded
+    "heads":      "model",   # TP: attention heads
+    "kv_heads":   "model",
+    "mlp":        "model",   # TP: FFN width / mamba d_inner
+    "expert_mlp": "model",   # fallback when 'experts' itself can't shard
+    "experts":    "model",   # EP
+    "embed":      "data",    # FSDP (ZeRO-3) over the data axis
+    "embed_out":  None,
+    "head_dim":   None,
+    "layers":     None,      # scan axis
+}
+ACT_RULES: dict[str, Any] = {
+    "batch":      ("pod", "data"),
+    "seq":        None,
+    "embed":      None,
+    "heads":      "model",
+    "kv_heads":   "model",
+    "mlp":        "model",
+    "experts":    "model",
+    "vocab":      "model",
+    "cache_seq":  None,
+}
+# fmt: on
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    param: dict[str, Any]
+    act: dict[str, Any]
+
+    def with_overrides(self, *, param=None, act=None) -> "ShardingRules":
+        return ShardingRules(
+            {**self.param, **(param or {})}, {**self.act, **(act or {})}
+        )
+
+
+DEFAULT_RULES = ShardingRules(PARAM_RULES, ACT_RULES)
+
+
+def _axis_size(mesh: Mesh, assignment) -> int:
+    if assignment is None:
+        return 1
+    if isinstance(assignment, str):
+        assignment = (assignment,)
+    size = 1
+    for a in assignment:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def spec_for(
+    shape: tuple[int, ...],
+    axes_s: str,
+    rules: dict[str, Any],
+    mesh: Mesh,
+) -> P:
+    """Build a PartitionSpec, dropping any non-divisible / absent mapping."""
+    axes = parse_axes(axes_s)
+    assert len(axes) == len(shape), f"axes {axes} vs shape {shape}"
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        assignment = rules.get(name) if name else None
+        if assignment is None:
+            parts.append(None)
+            continue
+        if isinstance(assignment, str):
+            assignment = (assignment,)
+        # keep only mesh axes present, unused so far, and divisible
+        kept = []
+        remaining = dim
+        for a in assignment:
+            if a not in mesh.shape or a in used:
+                continue
+            if remaining % mesh.shape[a] == 0:
+                kept.append(a)
+                remaining //= mesh.shape[a]
+        for a in kept:
+            used.add(a)
+        parts.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    # strip trailing Nones for tidy specs
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_specs(
+    tree_axes: PyTree, tree_shapes: PyTree, rules: dict[str, Any], mesh: Mesh
+) -> PyTree:
+    """Map (axes-string tree, shaped tree) -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda axes_s, leaf: spec_for(tuple(leaf.shape), axes_s, rules, mesh),
+        tree_axes,
+        tree_shapes,
+    )
+
+
+def tree_shardings(
+    tree_axes: PyTree, tree_shapes: PyTree, rules: dict[str, Any], mesh: Mesh
+) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs(tree_axes, tree_shapes, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def shard_bytes_per_device(tree_shapes: PyTree, tree_specs_: PyTree, mesh: Mesh) -> int:
+    """Napkin per-device bytes for a sharded tree (dry-run feasibility)."""
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(tree_shapes), jax.tree.leaves(
+        tree_specs_, is_leaf=lambda x: isinstance(x, P)
+    )):
+        n = int(np.prod(leaf.shape, dtype=np.int64)) if leaf.shape else 1
+        denom = 1
+        for part in spec:
+            for a in (part if isinstance(part, tuple) else (part,)) if part else ():
+                denom *= mesh.shape[a]
+        total += n * np.dtype(leaf.dtype).itemsize // denom
+    return total
+
+
+def rules_for_shape(
+    kind: str,
+    *,
+    global_batch: int,
+    seq_len: int,
+    mesh: Mesh,
+    n_kv_heads: int,
+    weight_stationary: bool = False,
+) -> ShardingRules:
+    """Shape-conditional rule adjustments (the production heuristics).
+
+    * decode shapes: KV caches shard kv_heads over 'model' when divisible,
+      else the cache *sequence* dim goes to 'model' (flash-decoding split-KV —
+      GSPMD inserts the distributed-softmax collectives).
+    * long-context (batch < data axis): sequence-parallel decode — the cache
+      seq dim shards over 'data' (and kv-head sharding stays on 'model').
+    * ``weight_stationary`` (§Perf, decode only): ZeRO-style FSDP weight
+      gathers cost GBs *per generated token*; instead 2D-shard the weights'
+      output dims over (data × model), replicate the (tiny) per-token
+      activations over 'data', and shard caches over spare axes.  Weights
+      never move; only KB-scale activation partials are reduced.
+    """
+    rules = DEFAULT_RULES
+    if kind not in ("decode",):
+        return rules
+    data_ax = mesh.shape.get("data", 1)
+    model_ax = mesh.shape.get("model", 1)
+    batch_axes = _axis_size(mesh, ACT_RULES["batch"])
+    act: dict[str, Any] = {}
+    if weight_stationary:
+        act["batch"] = ("pod",) if "pod" in mesh.shape else None
+        act["mlp"] = ("data", "model")
+        act["experts"] = "model"
+        if n_kv_heads % model_ax == 0:
+            act["cache_seq"] = "data"
+        else:
+            act["cache_seq"] = ("data", "model")
+            act["kv_heads"] = None
+        param = {
+            "embed": None,  # no FSDP at decode: weights stay put
+            "mlp": ("data", "model"),
+            "expert_mlp": "data",  # experts already on 'model'
+        }
+        return rules.with_overrides(param=param, act=act)
+    if global_batch < batch_axes:
+        # SP: batch can't fill (pod, data) — put cache seq on 'data' instead.
+        act["batch"] = None if global_batch < data_ax else ("pod",)
+        act["cache_seq"] = "data"
+        if n_kv_heads % model_ax != 0:
+            act["cache_seq"] = ("data", "model")
+            act["kv_heads"] = None
+    elif n_kv_heads % model_ax != 0:
+        # GQA too narrow for TP: split-KV over 'model' instead of replicating.
+        act["cache_seq"] = "model"
+        act["kv_heads"] = None
+    return rules.with_overrides(act=act)

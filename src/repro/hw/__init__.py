@@ -1,0 +1,3 @@
+from repro.hw.specs import CHIPS, MXU_ALIGN, TPU_V5E, ChipSpec, default_chip
+
+__all__ = ["CHIPS", "MXU_ALIGN", "TPU_V5E", "ChipSpec", "default_chip"]

@@ -1,0 +1,62 @@
+"""Hardware backend models.
+
+This is the Adaptyst-style "backend module" registry: every SDFG node is
+eventually assigned to one of these component models (MXU / VPU / HBM / ICI /
+HOST), and the roofline engine prices a node's work against the component it
+was assigned to.  The numbers below are the TARGET hardware (TPU v5e); the
+container we develop on is CPU-only, so these are modelling constants, never
+measured.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Per-chip hardware constants for one accelerator generation."""
+
+    name: str
+    # Compute units.
+    peak_flops_bf16: float  # FLOP/s, MXU systolic arrays
+    peak_flops_f32: float
+    # Memory hierarchy (HBM -> VMEM -> VREG).
+    hbm_bytes: int
+    hbm_bw: float  # bytes/s
+    vmem_bytes: int
+    # Interconnect.
+    ici_link_bw: float  # bytes/s per link, one direction
+    ici_links: int  # links per chip (2D torus on v5e: 4)
+    # Host link (PCIe) — the "system" side of the sys/user split.
+    host_bw: float
+
+    @property
+    def ici_bisection_bw(self) -> float:
+        return self.ici_link_bw * self.ici_links
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_f32=98.5e12,
+    hbm_bytes=16 * 1024**3,
+    hbm_bw=819e9,
+    vmem_bytes=128 * 1024**2,
+    ici_link_bw=50e9,
+    ici_links=4,
+    host_bw=32e9,
+)
+
+# Registry keyed by name so configs can select hardware symbolically.
+CHIPS: dict[str, ChipSpec] = {"tpu_v5e": TPU_V5E}
+
+# MXU tile alignment: matmul dims should be multiples of this for full
+# systolic-array utilisation; Pallas BlockSpecs in kernels/ honour it.
+MXU_ALIGN = 128
+# VPU lane/sublane shape for fp32 (8, 128); bf16 packs (16, 128).
+VPU_LANES = 128
+VPU_SUBLANES = 8
+
+
+def default_chip() -> ChipSpec:
+    return TPU_V5E

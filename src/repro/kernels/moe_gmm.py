@@ -1,0 +1,89 @@
+"""Grouped expert matmul (GMM) Pallas TPU kernel for MoE layers.
+
+(E, C, D) @ (E, D, F) -> (E, C, F): one matmul per expert over its capacity
+bucket.  TPU-native choices:
+* The grid is (E, C/bc, F/bf, D/bd) with the contraction dim innermost, so a
+  (bc, bf) f32 accumulator persists in VMEM scratch across the D sweep and the
+  MXU sees back-to-back (bc×bd)·(bd×bf) tiles — bc/bf/bd default to 128/128/512
+  (multiples of the 128-lane MXU edge).
+* Expert weight tiles stream HBM→VMEM once per (ci, fi) pair; because experts
+  are the outermost grid dim, weights for expert e are fully reused across its
+  capacity rows before moving on (maximises VMEM reuse of the big operand).
+* An optional fused epilogue applies the gated-FFN activation, saving one HBM
+  round-trip of the (E, C, F) intermediate in the w1/w3 pass.
+
+Validated against kernels.ref.gmm_ref with interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr, *, n_d_blocks: int, epilogue: Optional[str]):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0]  # (bc, bd)
+    w = w_ref[0]  # (bd, bf)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(di == n_d_blocks - 1)
+    def _finish():
+        acc = acc_scr[...]
+        if epilogue == "silu":
+            acc = acc * jax.nn.sigmoid(acc)
+        elif epilogue == "gelu":
+            acc = jax.nn.gelu(acc, approximate=True)
+        o_ref[0, ...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_d", "epilogue", "interpret")
+)
+def gmm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    block_d: int = 512,
+    epilogue: Optional[str] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F) with f32 accumulation."""
+    E, C, D = x.shape
+    _, _, F = w.shape
+    block_c = min(block_c, C)
+    block_f = min(block_f, F)
+    block_d = min(block_d, D)
+    pad_c, pad_f, pad_d = -C % block_c, -F % block_f, -D % block_d
+    if pad_c or pad_d:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, pad_d)))
+    if pad_d or pad_f:
+        w = jnp.pad(w, ((0, 0), (0, pad_d), (0, pad_f)))
+    n_c, n_f, n_d = (C + pad_c) // block_c, (F + pad_f) // block_f, (D + pad_d) // block_d
+
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, n_d_blocks=n_d, epilogue=epilogue),
+        grid=(E, n_c, n_f, n_d),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, block_d, block_f), lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f), lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, n_c * block_c, n_f * block_f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+    return out[:, :C, :F]

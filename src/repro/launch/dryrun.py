@@ -1,0 +1,335 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell,
+``jax.jit(step).lower(abstract args).compile()`` must succeed on the
+production mesh, and the compiled artifact yields the roofline inputs
+(cost_analysis FLOPs/bytes + collective operand bytes from the HLO text).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out FILE]
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax locks
+# the device count on first init, so this precedes every other import.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_archs, supports_shape
+from repro.core.roofline import analyze_compiled, model_flops
+from repro.distributed import sharding as shd
+from repro.launch import inputs as inputs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.training.step import TrainConfig, abstract_train_state, make_train_step, train_state_axes
+
+
+def _shardings(tree_axes, tree_abs, rules, mesh):
+    return shd.tree_shardings(tree_axes, tree_abs, rules, mesh)
+
+
+def _v_it1(cfg):
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg,
+        fused_attention_vjp=True,
+        pad_heads_to=16 if cfg.n_heads % 16 else 0,
+        activation_constraints=True,
+    )
+
+
+def _v_it2(cfg):
+    import dataclasses
+
+    return dataclasses.replace(_v_it1(cfg), loss_table_replicated=True)
+
+
+def _v_it3(cfg):
+    import dataclasses
+
+    # fewer/bigger CE chunks: the (replicated-on-data) unembed table is
+    # re-read once per chunk — 8k chunks cut that traffic 8× while per-device
+    # logits stay ~100 MB.
+    return dataclasses.replace(_v_it2(cfg), loss_chunk=8192)
+
+
+def _v_it6(cfg):
+    import dataclasses
+
+    # SSM-scan chunk remat: AD saves chunk-boundary states only (the Mamba/
+    # RWKV analogue of the flash VJP).
+    return dataclasses.replace(_v_it3(cfg), chunk_scan_remat=True)
+
+
+# §Perf iteration ladder (all semantics-preserving; EXPERIMENTS.md §Perf)
+VARIANTS = {
+    "baseline": lambda cfg: cfg,
+    "it1_flashvjp_padheads": _v_it1,
+    "it2_losstable": _v_it2,
+    "it3_losschunks": _v_it3,
+    "it4_splitkv": _v_it3,  # + decode_split_kv, applied per-cell below
+    "it5_decode_ws": _v_it3,  # + weight-stationary decode layout
+    "it6_ssm_remat": _v_it6,  # + chunk-body remat in mamba/rwkv scans (measured
+    # neutral on CPU lowering — EXPERIMENTS.md §Perf cell 4; kept as a variant)
+    "optimized": _v_it3,
+}
+# variants that enable the shard_map split-KV decode combine (only meaningful
+# on decode cells whose rules seq-sharded the cache over 'model')
+_SPLIT_KV_VARIANTS = {"it4_splitkv", "it5_decode_ws", "optimized"}
+# variants that use the weight-stationary decode layout (decode cells only)
+_WS_DECODE_VARIANTS = {"it5_decode_ws", "optimized"}
+
+
+def optimized(cfg):
+    """The beyond-paper §Perf bundle (semantics-preserving, see EXPERIMENTS.md)."""
+    return _v_it3(cfg)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    extra_rules: Optional[dict] = None,
+    opt: bool = False,
+    variant: Optional[str] = None,
+):
+    """Build and lower the step for one (arch, shape) cell on ``mesh``.
+
+    Returns (lowered, step_kind, abstract_args).
+    """
+    cfg = get_config(arch)
+    if variant:
+        cfg = VARIANTS[variant](cfg)
+    elif opt:
+        cfg = optimized(cfg)
+    shape = SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    # Weight-stationary decode pays only when the per-token FSDP weight
+    # gathers dominate: huge-param archs (jamba's 398B ⇒ 7.7 GB gathered per
+    # generated token) or attention-free archs (no KV-cache read to amplify).
+    # Measured both ways in EXPERIMENTS.md §Perf — this gate is the layout
+    # cost-model ("match the component to the workload", the Adaptyst story).
+    def _ws_pays(c) -> bool:
+        from repro.models import lm as _lm
+        from repro.utils.tree import tree_size_bytes
+
+        if not c.uses_attention:
+            return True
+        return tree_size_bytes(_lm.abstract_params(c)) > 300e9
+
+    weight_stationary = (
+        (opt or variant in _WS_DECODE_VARIANTS)
+        and shape.kind == "decode"
+        and shape.global_batch >= mesh.shape.get("data", 1)  # batch=1: nothing to trade
+        and _ws_pays(cfg)
+    )
+    rules = shd.rules_for_shape(
+        shape.kind,
+        global_batch=shape.global_batch,
+        seq_len=shape.seq_len,
+        mesh=mesh,
+        n_kv_heads=cfg.n_kv_heads,
+        weight_stationary=weight_stationary,
+    )
+    if extra_rules:
+        rules = rules.with_overrides(**extra_rules)
+    # the shard_map split-KV combine is co-designed with the weight-stationary
+    # cache layout; with the standard layout XLA's own partial-softmax handling
+    # measured equal-or-better (EXPERIMENTS.md §Perf it4).
+    wants_split = weight_stationary and (opt or variant in _SPLIT_KV_VARIANTS)
+    cache_seq_assign = rules.act.get("cache_seq")
+    if wants_split and shape.kind == "decode" and cache_seq_assign:
+        import dataclasses
+
+        seq_axes = (
+            (cache_seq_assign,)
+            if isinstance(cache_seq_assign, str)
+            else tuple(cache_seq_assign)
+        )
+        batch_assign = rules.act.get("batch")
+        batch_axes = (
+            ()
+            if batch_assign is None
+            else ((batch_assign,) if isinstance(batch_assign, str) else tuple(batch_assign))
+        )
+        cfg = dataclasses.replace(
+            cfg,
+            decode_split_kv=True,
+            decode_seq_axes=seq_axes,
+            decode_batch_axes=batch_axes,
+        )
+    batch_abs = inputs_mod.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig()
+        step = make_train_step(cfg, tcfg)
+        state_abs = abstract_train_state(cfg, tcfg)
+        state_shd = _shardings(train_state_axes(cfg), state_abs, rules.param, mesh)
+        batch_axes = {k: "batch,seq" for k in ("tokens", "labels")}
+        if "frontend_embed" in batch_abs:
+            batch_axes["frontend_embed"] = "batch,seq,embed"
+        batch_shd = _shardings(batch_axes, batch_abs, rules.act, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_shd, batch_shd),
+            out_shardings=(state_shd, None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state_abs, batch_abs)
+        return lowered, "train_step", (state_abs, batch_abs)
+
+    params_abs = lm.abstract_params(cfg)
+    params_shd = _shardings(lm.param_axes(cfg), params_abs, rules.param, mesh)
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, batch):
+            return lm.prefill(
+                params, cfg, batch["tokens"], batch.get("frontend_embed")
+            )
+
+        batch_axes = {"tokens": "batch,seq"}
+        if "frontend_embed" in batch_abs:
+            batch_axes["frontend_embed"] = "batch,seq,embed"
+        batch_shd = _shardings(batch_axes, batch_abs, rules.act, mesh)
+        jitted = jax.jit(
+            prefill_step, in_shardings=(params_shd, batch_shd), out_shardings=None
+        )
+        lowered = jitted.lower(params_abs, batch_abs)
+        return lowered, "prefill_step", (params_abs, batch_abs)
+
+    # decode
+    caches_abs = inputs_mod.abstract_decode_caches(cfg, SHAPES[shape_name])
+    caches_shd = _shardings(lm.cache_axes(cfg), caches_abs, rules.act, mesh)
+    batch_axes = {"tokens": "batch", "cur_pos": "batch"}
+    if "frontend_embed" in batch_abs:
+        batch_axes["frontend_embed"] = "batch,seq,embed"
+    batch_shd = _shardings(batch_axes, batch_abs, rules.act, mesh)
+
+    def serve_step(params, batch, caches):
+        return lm.decode_step(
+            params,
+            cfg,
+            batch["tokens"],
+            batch["cur_pos"],
+            caches,
+            batch.get("frontend_embed"),
+        )
+
+    jitted = jax.jit(
+        serve_step,
+        in_shardings=(params_shd, batch_shd, caches_shd),
+        out_shardings=(None, caches_shd),
+        donate_argnums=(2,),
+    )
+    lowered = jitted.lower(params_abs, batch_abs, caches_abs)
+    return lowered, "serve_step", (params_abs, batch_abs, caches_abs)
+
+
+class SkipCell(Exception):
+    pass
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    opt: bool = False,
+    variant: Optional[str] = None,
+) -> dict[str, Any]:
+    """Lower + compile + analyse one cell.  Returns the record for §Dry-run."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec: dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_devices": mesh.devices.size,
+        "variant": variant or ("optimized" if opt else "baseline"),
+    }
+    try:
+        with mesh:
+            lowered, kind, _ = lower_cell(
+                arch, shape_name, mesh, opt=opt, variant=variant
+            )
+            rec["step"] = kind
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["lower_s"] = round(t1 - t0, 1)
+            rec["compile_s"] = round(time.time() - t1, 1)
+            rec.update(analyze_compiled(lowered, compiled, mesh))
+            # useful-work yardstick: MODEL_FLOPS vs compiled HLO FLOPs
+            cfg = get_config(arch)
+            mf = model_flops(cfg, SHAPES[shape_name], lm.abstract_params(cfg))
+            rec["model_flops_global"] = mf
+            hlo_global = rec["hlo_flops_per_dev"] * mesh.devices.size
+            rec["useful_flops_ratio"] = round(mf / hlo_global, 4) if hlo_global else None
+            # roofline fraction: ideal compute time / bound step time
+            t_ideal = mf / (mesh.devices.size * 197e12)
+            rec["t_model_ideal_s"] = t_ideal
+            rec["roofline_fraction"] = round(
+                t_ideal / rec["step_time_bound_s"], 4
+            ) if rec["step_time_bound_s"] else None
+            rec["status"] = "ok"
+    except SkipCell as e:
+        rec["status"] = "skip"
+        rec["reason"] = str(e)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", action="store_true", help="lower the §Perf-optimized variant")
+    ap.add_argument("--variant", default=None, choices=list(VARIANTS),
+                    help="specific §Perf iteration to lower")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            try:
+                rec = run_cell(
+                    arch, shape, multi_pod=args.multi_pod, opt=args.opt,
+                    variant=args.variant,
+                )
+            except Exception as e:  # a failure here is a bug in the system
+                rec = {
+                    "arch": arch,
+                    "shape": shape,
+                    "status": "FAIL",
+                    "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc(limit=6),
+                }
+                n_fail += 1
+            print(json.dumps(rec, default=str))
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec, default=str) + "\n")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the abstract batch for the shape's step
+kind; ``step_signature`` bundles it with the abstract state/caches — the
+complete ``.lower()`` argument list for the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.activation_dtype)
+    if shape.kind == "train":
+        batch = {
+            "tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32),
+        }
+        if cfg.frontend != "text":
+            batch["frontend_embed"] = SDS((B, S, cfg.d_model), act)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.frontend != "text":
+            batch["frontend_embed"] = SDS((B, S, cfg.d_model), act)
+        return batch
+    if shape.kind == "decode":
+        batch = {
+            "tokens": SDS((B,), jnp.int32),
+            "cur_pos": SDS((B,), jnp.int32),
+        }
+        if cfg.frontend != "text":
+            batch["frontend_embed"] = SDS((B, 1, cfg.d_model), act)
+        return batch
+    raise ValueError(shape.kind)
+
+
+def abstract_decode_caches(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """Caches sized for the shape's context length (decode shapes only)."""
+    assert shape.kind == "decode"
+    return lm.abstract_caches(cfg, shape.global_batch, shape.seq_len)

@@ -1,0 +1,29 @@
+"""Mesh construction (functions only — importing never touches device state).
+
+Production topology (TPU v5e): 16×16 = 256 chips per pod; the multi-pod mesh
+adds a leading 'pod' axis over DCN.  'data' is the FSDP axis, 'model' the
+TP/EP axis, 'pod' pure DP (parameters never shard across DCN).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — the dry-run "
+            "sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before importing jax"
+        )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_local_mesh() -> Mesh:
+    """1-device (data=1, model=1) mesh for CPU smoke tests."""
+    return Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

@@ -1,0 +1,1 @@
+"""Model definitions: one unified decoder-only LM over a layer-pattern spec."""

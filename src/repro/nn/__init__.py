@@ -1,0 +1,7 @@
+"""Pure-JAX neural-network module layer.
+
+Modules are plain functions over nested param dicts.  Every parameter is
+created through a :class:`~repro.nn.core.ParamFactory`, so a single builder
+definition yields (a) initialized values, (b) logical sharding axes, and
+(c) allocation-free ShapeDtypeStructs for the multi-pod dry-run.
+"""

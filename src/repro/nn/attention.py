@@ -1,0 +1,192 @@
+"""GQA attention block: global / sliding-window, softcap, QK-norm, QKV-bias.
+
+Supports three execution modes:
+* ``full``   — training / prefill over a whole sequence (flash/local path).
+* ``decode`` — one new token against a KV cache (full or SWA ring buffer).
+
+Cache contract (uniform for full and ring caches): ``pos_ids[b, s]`` is the
+absolute position held in cache slot ``s`` (−1 ⇒ empty).  Ring buffers write
+slot ``pos % size``; masking is entirely position-based so the attention op
+never needs to know which cache kind it got.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.nn import core as nn
+
+Cache = dict[str, jax.Array]
+
+
+def attention_init(pf: nn.ParamFactory, cfg: ModelConfig) -> dict:
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "q": nn.linear_init(
+            pf, "q", (D,), (Hq, hd), ("embed",), ("heads", "head_dim"), bias=cfg.qkv_bias
+        ),
+        "k": nn.linear_init(
+            pf, "k", (D,), (Hkv, hd), ("embed",), ("kv_heads", "head_dim"), bias=cfg.qkv_bias
+        ),
+        "v": nn.linear_init(
+            pf, "v", (D,), (Hkv, hd), ("embed",), ("kv_heads", "head_dim"), bias=cfg.qkv_bias
+        ),
+        "o": nn.linear_init(
+            pf,
+            "o",
+            (Hq, hd),
+            (D,),
+            ("heads", "head_dim"),
+            ("embed",),
+            scale=0.02 / max(1, 2 * cfg.n_layers) ** 0.5,
+        ),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = nn.rmsnorm_init(pf, "q_norm", hd, "head_dim")
+        p["k_norm"] = nn.rmsnorm_init(pf, "k_norm", hd, "head_dim")
+    return p
+
+
+def _window(cfg: ModelConfig, mixer: str) -> Optional[int]:
+    return cfg.sliding_window if mixer == "swa" else None
+
+
+def init_cache(
+    cfg: ModelConfig, mixer: str, batch: int, max_seq: int, dtype: Any
+) -> Cache:
+    """Full cache for global layers; ring buffer of `sliding_window` for SWA."""
+    size = min(cfg.sliding_window, max_seq) if mixer == "swa" else max_seq
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos_ids": jnp.full((batch, size), -1, jnp.int32),
+    }
+
+
+def attention_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mixer: str,
+    positions: jax.Array,
+    *,
+    mode: str = "full",
+    cache: Optional[Cache] = None,
+) -> tuple[jax.Array, Optional[Cache]]:
+    """x: (B, S, D) for full; (B, 1, D) for decode.  positions: (B, S) / (B, 1)."""
+    B, S, _ = x.shape
+    window = _window(cfg, mixer)
+    q = nn.linear(p["q"], x)  # (B, S, Hq, hd)
+    k = nn.linear(p["k"], x)  # (B, S, Hkv, hd)
+    v = nn.linear(p["v"], x)
+    if cfg.qk_norm:
+        q = nn.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = nn.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = nn.apply_rope(q, positions, cfg.rope_theta)
+    k = nn.apply_rope(k, positions, cfg.rope_theta)
+
+    if mode == "full":
+        n_heads = q.shape[2]
+        k_orig, v_orig = k, v  # cache gets the true KV heads, not padded ones
+        pad_h = 0
+        if cfg.pad_heads_to and cfg.pad_heads_to > n_heads:
+            # §Perf: pad Q-head *activations* (params untouched) so the S²
+            # attention compute shards over 'model' even when n_heads doesn't
+            # divide it (smollm 15H, qwen2 14H vs a 16-way axis).  KV heads
+            # are expanded to per-Q first (GQA grouping survives padding);
+            # padded heads have zero q ⇒ garbage output, dropped before the
+            # output projection.
+            G = q.shape[2] // k.shape[2]
+            if G > 1:
+                k = jnp.repeat(k, G, axis=2)
+                v = jnp.repeat(v, G, axis=2)
+            pad_h = cfg.pad_heads_to - n_heads
+            zpad = lambda a: jnp.concatenate(
+                [a, jnp.zeros(a.shape[:2] + (pad_h, a.shape[3]), a.dtype)], axis=2
+            )
+            q, k, v = zpad(q), zpad(k), zpad(v)
+        if cfg.activation_constraints:
+            from repro.distributed.constrain import constrain
+
+            kv_ax = "heads" if pad_h else "kv_heads"
+            q = constrain(q, "batch", "seq", "heads", "head_dim")
+            k = constrain(k, "batch", "seq", kv_ax, "head_dim")
+            v = constrain(v, "batch", "seq", kv_ax, "head_dim")
+        if cfg.fused_attention_vjp:
+            from repro.kernels.flash_vjp import flash_attention_fused
+
+            out = flash_attention_fused(
+                q, k, v, True, window, cfg.attn_logit_softcap, None, 0, 512
+            )
+        else:
+            out = ops.attention(
+                q, k, v, causal=True, window=window, softcap=cfg.attn_logit_softcap
+            )
+        if pad_h:
+            out = out[:, :, :n_heads]
+        new_cache = None
+        if cache is not None:
+            new_cache = _fill_cache_from_prefill(cache, k_orig, v_orig, positions)
+        out = nn.linear(p["o"], out, n_in=2)
+        return out, new_cache
+
+    assert mode == "decode" and cache is not None and S == 1
+    cur = positions[:, 0]  # (B,)
+    size = cache["k"].shape[1]
+    slot = (cur % size).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    pos_ids = cache["pos_ids"].at[bidx, slot].set(cur.astype(jnp.int32))
+    out = None
+    if cfg.decode_split_kv:
+        out = ops.decode_attention_seq_sharded(
+            q[:, 0], k_cache, v_cache, pos_ids, cur,
+            window=window, softcap=cfg.attn_logit_softcap,
+            seq_axes=tuple(cfg.decode_seq_axes),
+            batch_axes=tuple(cfg.decode_batch_axes),
+        )
+        if out is not None:
+            out = out.reshape(B, 1, q.shape[2], q.shape[3])
+    if out is None:
+        out = ops.decode_attention(
+            q[:, 0],
+            k_cache,
+            v_cache,
+            pos_ids,
+            cur,
+            window=window,
+            softcap=cfg.attn_logit_softcap,
+        )[:, None]
+    out = nn.linear(p["o"], out, n_in=2)
+    return out, {"k": k_cache, "v": v_cache, "pos_ids": pos_ids}
+
+
+def _fill_cache_from_prefill(
+    cache: Cache, k: jax.Array, v: jax.Array, positions: jax.Array
+) -> Cache:
+    """Scatter prefill K/V into a (possibly smaller ring) cache by slot = pos % size."""
+    B, S = positions.shape
+    size = cache["k"].shape[1]
+    if size >= S:
+        # contiguous write at slots [pos]: for aligned prefill pos = arange(S)
+        slots = positions % size
+    else:
+        # ring: only the last `size` positions survive; earlier writes are
+        # overwritten by later ones in slot order. Scatter handles it since
+        # later entries win with .at[].set on increasing positions? Scatter
+        # order is unspecified -> mask to last `size` positions explicitly.
+        keep_from = positions[:, -1:] - (size - 1)
+        keep = positions >= keep_from
+        slots = jnp.where(keep, positions % size, size)  # size = out-of-range drop
+    bidx = jnp.arange(B)[:, None]
+    k_cache = cache["k"].at[bidx, slots].set(k.astype(cache["k"].dtype), mode="drop")
+    v_cache = cache["v"].at[bidx, slots].set(v.astype(cache["v"].dtype), mode="drop")
+    pos_ids = cache["pos_ids"].at[bidx, slots].set(
+        positions.astype(jnp.int32), mode="drop"
+    )
+    return {"k": k_cache, "v": v_cache, "pos_ids": pos_ids}

@@ -1,0 +1,248 @@
+"""Param factories + basic modules (Linear, RMSNorm, Embedding, RoPE).
+
+Parameters are nested dicts of arrays.  A module is two functions:
+
+* a *builder* ``foo_init(pf, ...)`` that declares every parameter through the
+  :class:`ParamFactory` (name, shape, **logical axes**, init law), and
+* an *apply* ``foo(params, x, ...)`` that consumes the dict.
+
+Because the builder is the single source of truth, running it under a
+:class:`ValueFactory` yields initialized arrays, under an :class:`AxesFactory`
+the logical-axis tree (consumed by ``repro.distributed.sharding``), and under
+``jax.eval_shape`` the allocation-free param skeleton used by the dry-run.
+"""
+from __future__ import annotations
+
+import zlib
+from contextlib import contextmanager
+from typing import Any, Callable, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = tuple[str | None, ...]
+
+
+class ParamFactory:
+    """Base: tracks a '/'-joined scope path; subclasses realise params."""
+
+    def __init__(self) -> None:
+        self._scope: list[str] = []
+
+    @contextmanager
+    def scope(self, name: str) -> Iterator[None]:
+        self._scope.append(name)
+        try:
+            yield
+        finally:
+            self._scope.pop()
+
+    def _path(self, name: str) -> str:
+        return "/".join(self._scope + [name])
+
+    def param(
+        self,
+        name: str,
+        shape: Sequence[int],
+        axes: Axes,
+        init: str | Callable = "normal",
+        scale: float | None = None,
+        dtype: Any = None,
+    ) -> Any:
+        if len(shape) != len(axes):
+            raise ValueError(
+                f"{self._path(name)}: shape {tuple(shape)} has {len(shape)} dims "
+                f"but axes {axes} has {len(axes)}"
+            )
+        return self._make(self._path(name), tuple(shape), axes, init, scale, dtype)
+
+    def _make(self, path, shape, axes, init, scale, dtype):  # pragma: no cover
+        raise NotImplementedError
+
+
+class ValueFactory(ParamFactory):
+    """Realises initialized arrays.  Keys are derived from the param path
+    (crc32 fold-in) so initialization is order- and refactor-independent."""
+
+    def __init__(self, key: jax.Array, param_dtype: Any = jnp.bfloat16) -> None:
+        super().__init__()
+        self._key = key
+        self.param_dtype = param_dtype
+
+    def _make(self, path, shape, axes, init, scale, dtype):
+        dtype = dtype or self.param_dtype
+        key = jax.random.fold_in(self._key, zlib.crc32(path.encode()))
+        if callable(init):
+            return init(key, shape).astype(dtype)
+        if init == "normal":
+            std = scale if scale is not None else 0.02
+            return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        raise ValueError(f"unknown init {init!r} at {path}")
+
+
+class AxesFactory(ParamFactory):
+    """Realises the logical-axes tree.
+
+    Leaves are comma-joined strings ("embed,heads,head_dim"; '' = replicated
+    dim) — strings are pytree *leaves*, so the axes tree maps/flattens in
+    lockstep with the value tree (tuples would be descended into).
+    """
+
+    def _make(self, path, shape, axes, init, scale, dtype):
+        return axes_str(axes)
+
+
+def axes_str(axes: Axes) -> str:
+    return ",".join(a if a else "" for a in axes)
+
+
+def parse_axes(s: str) -> tuple[str | None, ...]:
+    if s == "":
+        return ()
+    return tuple(a if a else None for a in s.split(","))
+
+
+class ShapeFactory(ParamFactory):
+    """Realises ShapeDtypeStructs without touching any device (dry-run)."""
+
+    def __init__(self, param_dtype: Any = jnp.bfloat16) -> None:
+        super().__init__()
+        self.param_dtype = param_dtype
+
+    def _make(self, path, shape, axes, init, scale, dtype):
+        dtype = dtype or self.param_dtype
+        if callable(init):  # special inits may fix their own dtype
+            spec = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), shape))
+            return jax.ShapeDtypeStruct(spec.shape, dtype)
+        return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Basic modules
+# ---------------------------------------------------------------------------
+
+
+def linear_init(
+    pf: ParamFactory,
+    name: str,
+    in_shape: Sequence[int],
+    out_shape: Sequence[int],
+    in_axes: Axes,
+    out_axes: Axes,
+    *,
+    bias: bool = False,
+    scale: float | None = None,
+) -> dict:
+    """General (possibly multi-dim) linear: contracts all of ``in_shape``."""
+    with pf.scope(name):
+        p = {
+            "w": pf.param(
+                "w",
+                tuple(in_shape) + tuple(out_shape),
+                tuple(in_axes) + tuple(out_axes),
+                init="normal",
+                scale=scale,
+            )
+        }
+        if bias:
+            p["b"] = pf.param("b", tuple(out_shape), tuple(out_axes), init="zeros")
+    return p
+
+
+def linear(p: dict, x: jax.Array, n_in: int = 1) -> jax.Array:
+    """Contract the last ``n_in`` dims of x with the first ``n_in`` of w."""
+    w = p["w"]
+    n_out = w.ndim - n_in
+    x_dims = tuple(range(x.ndim - n_in, x.ndim))
+    w_dims = tuple(range(n_in))
+    out = jax.lax.dot_general(
+        x, w, (((x_dims), (w_dims)), ((), ())), preferred_element_type=x.dtype
+    )
+    if "b" in p:
+        out = out + p["b"].astype(out.dtype)
+    del n_out
+    return out
+
+
+def rmsnorm_init(pf: ParamFactory, name: str, dim: int, axis: str | None = "embed") -> dict:
+    with pf.scope(name):
+        # Norm scales live in f32: tiny and precision-critical.
+        return {"scale": pf.param("scale", (dim,), (axis,), init="zeros", dtype=jnp.float32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """(1 + scale)-parameterised RMSNorm (Gemma convention), f32 math."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"])
+    return y.astype(dtype)
+
+
+def embedding_init(
+    pf: ParamFactory, name: str, vocab: int, dim: int, *, scale: float | None = None
+) -> dict:
+    # std 1/sqrt(dim): unit-norm rows, so tied-unembed logits start at O(1)
+    # (scale_by_dim archs multiply by sqrt(dim) on lookup, recovering unit std).
+    scale = dim**-0.5 if scale is None else scale
+    with pf.scope(name):
+        return {"table": pf.param("table", (vocab, dim), ("vocab", "embed"), scale=scale)}
+
+
+def embed(p: dict, ids: jax.Array, *, scale_by_dim: bool = False) -> jax.Array:
+    out = jnp.take(p["table"], ids, axis=0)
+    if scale_by_dim:
+        out = out * jnp.asarray(np.sqrt(p["table"].shape[1]), out.dtype)
+    return out
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    """Project hidden states to vocab logits (tied-embedding transpose)."""
+    return jax.lax.dot_general(
+        x,
+        p["table"],
+        (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, f32: (head_dim // 2,)."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    angles = angles[..., None, :]  # broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+ACTIVATIONS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,26 @@
+"""Modality frontend STUBS (per the assignment brief).
+
+``[vlm]`` (chameleon) and ``[audio]`` (musicgen) specify the transformer
+backbone only; the VQ-VAE image tokenizer / EnCodec neural codec are stubs:
+``input_specs()`` provides precomputed patch/frame embeddings as an extra
+``(B, S, d_model)`` input stream.  The stub applies a learned projection and
+adds the result to the token embeddings (early fusion).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.nn import core as nn
+
+
+def frontend_init(pf: nn.ParamFactory, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    return {
+        "proj": nn.linear_init(pf, "proj", (D,), (D,), ("embed",), ("embed_out",), scale=0.02)
+    }
+
+
+def frontend_apply(p: dict, emb: jax.Array) -> jax.Array:
+    """emb: precomputed (B, S, d_model) frame/patch embeddings."""
+    return nn.linear(p["proj"], emb)

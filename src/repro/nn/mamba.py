@@ -1,0 +1,144 @@
+"""Mamba-1 block (Jamba variant: RMSNorm on Δ/B/C for stability).
+
+Full-sequence mode uses the chunked selective scan (kernels.ops.mamba_scan);
+decode mode keeps O(1) state: a (d_conv−1)-deep conv window plus the
+(d_inner, d_state) SSM state per sequence.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.nn import core as nn
+
+Cache = dict[str, jax.Array]
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int, int, int]:
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    dt_rank = mc.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_inner, mc.d_state, mc.d_conv, dt_rank
+
+
+def mamba_init(pf: nn.ParamFactory, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    DI, N, DC, R = _dims(cfg)
+
+    def a_init(key, shape):
+        # S4D-real: A_log = log(1..N), broadcast over channels.
+        return jnp.broadcast_to(
+            jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None, :], shape
+        )
+
+    def dt_bias_init(key, shape):
+        # softplus^-1(dt) for dt ~ LogUniform[1e-3, 1e-1] (Mamba init).
+        dt = jnp.exp(
+            jax.random.uniform(key, shape, jnp.float32)
+            * (math.log(0.1) - math.log(1e-3))
+            + math.log(1e-3)
+        )
+        return dt + jnp.log(-jnp.expm1(-dt))
+
+    out_scale = 0.02 / max(1, 2 * cfg.n_layers) ** 0.5
+    return {
+        "in_proj": nn.linear_init(pf, "in_proj", (D,), (2 * DI,), ("embed",), ("mlp",)),
+        "conv_w": pf.param("conv_w", (DC, DI), (None, "mlp"), scale=1.0 / math.sqrt(DC)),
+        "conv_b": pf.param("conv_b", (DI,), ("mlp",), init="zeros"),
+        "x_proj": nn.linear_init(
+            pf, "x_proj", (DI,), (R + 2 * N,), ("mlp",), (None,)
+        ),
+        "dt_proj": nn.linear_init(
+            pf, "dt_proj", (R,), (DI,), (None,), ("mlp",), scale=R**-0.5
+        ),
+        "dt_bias": pf.param("dt_bias", (DI,), ("mlp",), init=dt_bias_init, dtype=jnp.float32),
+        "A_log": pf.param("A_log", (DI, N), ("mlp", None), init=a_init, dtype=jnp.float32),
+        "D": pf.param("D", (DI,), ("mlp",), init="ones", dtype=jnp.float32),
+        "dt_norm": nn.rmsnorm_init(pf, "dt_norm", R, None),
+        "b_norm": nn.rmsnorm_init(pf, "b_norm", N, None),
+        "c_norm": nn.rmsnorm_init(pf, "c_norm", N, None),
+        "out_proj": nn.linear_init(
+            pf, "out_proj", (DI,), (D,), ("mlp",), ("embed",), scale=out_scale
+        ),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype: Any) -> Cache:
+    DI, N, DC, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, DC - 1, DI), dtype),
+        "ssm": jnp.zeros((batch, DI, N), jnp.float32),
+    }
+
+
+def _ssm_inputs(p: dict, xs: jax.Array, cfg: ModelConfig):
+    """xs: (..., DI) -> dt (..., DI), B, C (..., N)."""
+    _, N, _, R = _dims(cfg)
+    dbc = nn.linear(p["x_proj"], xs)
+    dt_r, b, c = jnp.split(dbc, [R, R + N], axis=-1)
+    dt_r = nn.rmsnorm(p["dt_norm"], dt_r, cfg.norm_eps)
+    b = nn.rmsnorm(p["b_norm"], b, cfg.norm_eps)
+    c = nn.rmsnorm(p["c_norm"], c, cfg.norm_eps)
+    dt = jax.nn.softplus(
+        nn.linear(p["dt_proj"], dt_r).astype(jnp.float32) + p["dt_bias"]
+    )
+    return dt, b, c
+
+
+def mamba_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str = "full",
+    cache: Optional[Cache] = None,
+) -> tuple[jax.Array, Optional[Cache]]:
+    """x: (B, S, D) full / (B, 1, D) decode."""
+    B, S, _ = x.shape
+    DI, N, DC, _ = _dims(cfg)
+    xz = nn.linear(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)  # (B, S, DI) each
+    A = -jnp.exp(p["A_log"])
+
+    if mode == "full":
+        # causal depthwise conv as DC shifted adds (XLA-fusible, no im2col)
+        conv = sum(
+            p["conv_w"][i][None, None, :]
+            * jnp.pad(xs, ((0, 0), (DC - 1 - i, 0), (0, 0)))[:, :S]
+            for i in range(DC)
+        ) + p["conv_b"]
+        xs_c = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+        dt, b, c = _ssm_inputs(p, xs_c, cfg)
+        state0 = jnp.zeros((B, DI, N), jnp.float32)
+        y, state = ops.mamba_scan(
+            xs_c, dt.astype(x.dtype), A, b, c, p["D"], state0,
+            chunk=cfg.mamba.chunk, remat_chunks=cfg.chunk_scan_remat,
+        )
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "conv": xs[:, -(DC - 1):].astype(cache["conv"].dtype)
+                if S >= DC - 1
+                else jnp.concatenate([cache["conv"], xs], axis=1)[:, -(DC - 1):],
+                "ssm": state,
+            }
+    else:
+        assert cache is not None and S == 1
+        window = jnp.concatenate([cache["conv"], xs], axis=1)  # (B, DC, DI)
+        conv = (
+            jnp.einsum("bci,ci->bi", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+            + p["conv_b"]
+        )
+        xs_c = jax.nn.silu(conv).astype(x.dtype)  # (B, DI)
+        dt, b, c = _ssm_inputs(p, xs_c, cfg)
+        y, state = ops.mamba_step(xs_c, dt.astype(x.dtype), A, b, c, p["D"], cache["ssm"])
+        y = y[:, None]
+        new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype), "ssm": state}
+
+    y = y.reshape(B, S, DI) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return nn.linear(p["out_proj"], y), new_cache

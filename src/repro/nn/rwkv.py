@@ -1,0 +1,186 @@
+"""RWKV6 "Finch" block: data-dependent decay + token-shift (attention-free).
+
+Time-mix uses the chunked WKV scan (kernels.ops.rwkv6_scan) in full-sequence
+mode and the O(1) per-step recurrence in decode mode.  State per sequence:
+one shifted-token vector per mix point plus the (H, K, V) WKV state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.nn import core as nn
+
+Cache = dict[str, jax.Array]
+
+_TARGETS = ("r", "k", "v", "w", "g")  # ddlerp mix targets
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int]:
+    K = cfg.rwkv.head_dim
+    H = cfg.d_model // K
+    return H, K
+
+
+def time_mix_init(pf: nn.ParamFactory, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    H, K = _dims(cfg)
+    r = cfg.rwkv
+    out_scale = 0.02 / max(1, 2 * cfg.n_layers) ** 0.5
+
+    def decay_init(key, shape):
+        # per-channel base decay in [-7, ~0): slow..fast forget
+        n = shape[-1]
+        return jnp.broadcast_to(
+            -6.0 + 5.0 * (jnp.arange(n, dtype=jnp.float32) / max(1, n - 1)) ** 0.7, shape
+        )
+
+    p = {
+        "mu_base": pf.param("mu_base", (D,), ("embed",), init="zeros"),
+        "mu": pf.param("mu", (len(_TARGETS), D), (None, "embed"), init="zeros"),
+        "mix_w1": pf.param(
+            "mix_w1", (D, len(_TARGETS), r.mix_lora), ("embed", None, None)
+        ),
+        "mix_w2": pf.param(
+            "mix_w2", (len(_TARGETS), r.mix_lora, D), (None, None, "embed"), init="zeros"
+        ),
+        "recv": nn.linear_init(pf, "recv", (D,), (H, K), ("embed",), ("heads", "head_dim")),
+        "key": nn.linear_init(pf, "key", (D,), (H, K), ("embed",), ("heads", "head_dim")),
+        "value": nn.linear_init(pf, "value", (D,), (H, K), ("embed",), ("heads", "head_dim")),
+        "gate": nn.linear_init(pf, "gate", (D,), (H, K), ("embed",), ("heads", "head_dim")),
+        "w0": pf.param("w0", (H, K), ("heads", "head_dim"), init=decay_init, dtype=jnp.float32),
+        "decay_w1": pf.param("decay_w1", (D, r.decay_lora), ("embed", None)),
+        "decay_w2": pf.param(
+            "decay_w2", (r.decay_lora, H, K), (None, "heads", "head_dim"), init="zeros"
+        ),
+        "u": pf.param("u", (H, K), ("heads", "head_dim"), scale=0.5),
+        "ln_scale": pf.param("ln_scale", (H, K), ("heads", "head_dim"), init="ones", dtype=jnp.float32),
+        "ln_bias": pf.param("ln_bias", (H, K), ("heads", "head_dim"), init="zeros", dtype=jnp.float32),
+        "out": nn.linear_init(
+            pf, "out", (H, K), (D,), ("heads", "head_dim"), ("embed",), scale=out_scale
+        ),
+    }
+    return p
+
+
+def channel_mix_init(pf: nn.ParamFactory, cfg: ModelConfig) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    out_scale = 0.02 / max(1, 2 * cfg.n_layers) ** 0.5
+    return {
+        "mu_k": pf.param("mu_k", (D,), ("embed",), init="zeros"),
+        "mu_r": pf.param("mu_r", (D,), ("embed",), init="zeros"),
+        "wk": nn.linear_init(pf, "wk", (D,), (F,), ("embed",), ("mlp",)),
+        "wv": nn.linear_init(pf, "wv", (F,), (D,), ("mlp",), ("embed",), scale=out_scale),
+        "wr": nn.linear_init(pf, "wr", (D,), (D,), ("embed",), ("embed_out",)),
+    }
+
+
+def _shifted(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: x_{t-1} (zeros / cached last token at t=0)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: dict, x: jax.Array, sx: jax.Array) -> list[jax.Array]:
+    """Data-dependent token-shift interpolation (RWKV6), one mix per target."""
+    dx = sx - x
+    xx = x + dx * p["mu_base"].astype(x.dtype)
+    lo = jnp.tanh(jnp.einsum("bsd,dnr->bsnr", xx.astype(jnp.float32), p["mix_w1"].astype(jnp.float32)))
+    delta = jnp.einsum("bsnr,nrd->bsnd", lo, p["mix_w2"].astype(jnp.float32))  # (B,S,n,D)
+    outs = []
+    for i, _t in enumerate(_TARGETS):
+        mu_i = p["mu"][i].astype(jnp.float32) + delta[:, :, i]
+        outs.append(x + dx * mu_i.astype(x.dtype))
+    return outs
+
+
+def time_mix_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mode: str = "full",
+    cache: Optional[Cache] = None,
+) -> tuple[jax.Array, Optional[Cache]]:
+    B, S, D = x.shape
+    H, K = _dims(cfg)
+    prev = cache["shift"][:, None] if cache is not None else None
+    sx = _shifted(x, prev)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, sx)
+
+    r = nn.linear(p["recv"], xr)  # (B,S,H,K)
+    k = nn.linear(p["key"], xk)
+    v = nn.linear(p["value"], xv)
+    g = nn.linear(p["gate"], xg)
+    lw = jnp.tanh(xw.astype(jnp.float32) @ p["decay_w1"].astype(jnp.float32))
+    lw = jnp.einsum("bsr,rhk->bshk", lw, p["decay_w2"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(p["w0"][None, None] + lw))  # (B,S,H,K) in (0,1)
+
+    state0 = (
+        cache["wkv"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((B, H, K, K), jnp.float32)
+    )
+    if mode == "full":
+        out, state = ops.rwkv6_scan(
+            r, k, v, w.astype(jnp.float32), p["u"], state0,
+            chunk=cfg.rwkv.chunk, remat_chunks=cfg.chunk_scan_remat,
+        )
+    else:
+        assert S == 1
+        out, state = ops.rwkv6_step(
+            r[:, 0], k[:, 0], v[:, 0], w[:, 0].astype(r.dtype), p["u"], state0
+        )
+        out = out[:, None]
+
+    # per-head group-norm, then gate and project
+    of = out.astype(jnp.float32)
+    mean = of.mean(axis=-1, keepdims=True)
+    var = of.var(axis=-1, keepdims=True)
+    of = (of - mean) * jax.lax.rsqrt(var + 64e-5) * p["ln_scale"] + p["ln_bias"]
+    y = of.astype(x.dtype) * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = nn.linear(p["out"], y, n_in=2)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift": x[:, -1].astype(cache["shift"].dtype), "wkv": state}
+    return y, new_cache
+
+
+def channel_mix_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[Cache] = None,
+) -> tuple[jax.Array, Optional[Cache]]:
+    prev = cache["shift"][:, None] if cache is not None else None
+    sx = _shifted(x, prev)
+    dx = sx - x
+    xk = x + dx * p["mu_k"].astype(x.dtype)
+    xr = x + dx * p["mu_r"].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(nn.linear(p["wk"], xk).astype(jnp.float32)))
+    y = jax.nn.sigmoid(nn.linear(p["wr"], xr).astype(jnp.float32)) * nn.linear(
+        p["wv"], kk.astype(x.dtype)
+    ).astype(jnp.float32)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift": x[:, -1].astype(cache["shift"].dtype)}
+    return y.astype(x.dtype), new_cache
+
+
+def init_time_cache(cfg: ModelConfig, batch: int, dtype: Any) -> Cache:
+    H, K = _dims(cfg)
+    return {
+        "shift": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, K, K), jnp.float32),
+    }
+
+
+def init_channel_cache(cfg: ModelConfig, batch: int, dtype: Any) -> Cache:
+    return {"shift": jnp.zeros((batch, cfg.d_model), dtype)}

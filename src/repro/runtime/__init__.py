@@ -1,0 +1,1 @@
+"""Runtime substrate: training supervisor with fault tolerance."""

@@ -1,0 +1,1 @@
+"""Serving substrate: fixed-slot continuous-batching engine."""

@@ -1,0 +1,156 @@
+"""Continuous-batching serving engine (fixed decode slots).
+
+vLLM-style scheduling reduced to its TPU-friendly core: a static
+(max_batch)-slot decode batch whose caches live donated on device, per-slot
+prefill that scatters a new request's cache into its slot, and one fused
+decode step for all active slots per tick.  Static shapes everywhere — no
+recompilation as requests come and go (slot masks handle liveness).
+
+Request lifecycle events (spawn/exit) flow into the EventLog — the paper's
+thread/process tracing, where the unit of concurrency is the request.
+
+Prefill compiles per distinct prompt length (callers should bucket lengths);
+a production deployment would add a masked fixed-length prefill on top of the
+same cache contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.events import GLOBAL_LOG, EventLog
+from repro.models import lm
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: int = -1  # -1 = never; synthetic workloads run to max_new
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    done: bool = False
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params: Any,
+        scfg: ServeConfig,
+        *,
+        log: Optional[EventLog] = None,
+    ) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.log = GLOBAL_LOG if log is None else log
+        B, S = scfg.max_batch, scfg.max_seq
+        self.caches = lm.init_caches(cfg, B, S)
+        self.cur_pos = np.zeros(B, np.int32)  # next position per slot
+        self.active: list[Optional[Request]] = [None] * B
+        self.queue: list[Request] = []
+        self._rid = itertools.count()
+        self._key = jax.random.PRNGKey(scfg.seed)
+
+        # compiled surfaces (static shapes)
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(p, cfg, t, max_seq=S), static_argnums=()
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, ch: lm.decode_step(p, cfg, t, c, ch), donate_argnums=(3,)
+        )
+
+    # -- client API ----------------------------------------------------------
+
+    def submit(self, prompt: list[int], max_new: int = 32) -> int:
+        req = Request(next(self._rid), list(prompt), max_new)
+        self.queue.append(req)
+        self.log.record("spawn", "request", req.rid)
+        return req.rid
+
+    def run_to_completion(self) -> dict[int, list[int]]:
+        results: dict[int, list[int]] = {}
+        while self.queue or any(self.active):
+            for r in self.step():
+                results[r.rid] = r.out
+        return results
+
+    # -- engine tick ----------------------------------------------------------
+
+    def step(self) -> list[Request]:
+        """One tick: admit to free slots (prefill), then batched decode."""
+        self._admit()
+        finished = self._decode_tick()
+        return finished
+
+    def _admit(self) -> None:
+        for slot in range(self.scfg.max_batch):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            req.slot = slot
+            with self.log.lifecycle("prefill", req.rid):
+                tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, new_caches = self._prefill(self.params, tokens)
+                self.caches = jax.tree.map(
+                    lambda c, n: c.at[slot].set(n[0].astype(c.dtype)),
+                    self.caches,
+                    new_caches,
+                )
+                first = self._sample(logits)[0]
+                req.out.append(int(first))
+                self.cur_pos[slot] = len(req.prompt)
+            self.active[slot] = req
+
+    def _decode_tick(self) -> list[Request]:
+        live = [r for r in self.active if r is not None]
+        if not live:
+            return []
+        B = self.scfg.max_batch
+        tokens = np.zeros(B, np.int32)
+        for r in live:
+            tokens[r.slot] = r.out[-1]
+        logits, self.caches = self._decode(
+            self.params,
+            jnp.asarray(tokens),
+            jnp.asarray(self.cur_pos),
+            self.caches,
+        )
+        nxt = np.asarray(self._sample(logits))
+        finished: list[Request] = []
+        for r in live:
+            self.cur_pos[r.slot] += 1
+            tok = int(nxt[r.slot])
+            r.out.append(tok)
+            hit_eos = tok == self.scfg.eos_id
+            out_of_room = self.cur_pos[r.slot] + 1 >= self.scfg.max_seq
+            if len(r.out) >= r.max_new or hit_eos or out_of_room:
+                r.done = True
+                self.active[r.slot] = None
+                self.log.record("exit", "request", r.rid)
+                finished.append(r)
+        return finished
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits / self.scfg.temperature, axis=-1).astype(
+            jnp.int32
+        )

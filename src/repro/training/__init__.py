@@ -1,0 +1,1 @@
+"""Training substrate: AdamW, LR schedules, microbatched train-step builder."""

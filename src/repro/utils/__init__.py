@@ -1,0 +1,19 @@
+from repro.utils.tree import (
+    assert_no_nans,
+    tree_cast,
+    tree_flatten_with_paths,
+    tree_map_with_path,
+    tree_param_count,
+    tree_size_bytes,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "assert_no_nans",
+    "tree_cast",
+    "tree_flatten_with_paths",
+    "tree_map_with_path",
+    "tree_param_count",
+    "tree_size_bytes",
+    "tree_zeros_like",
+]

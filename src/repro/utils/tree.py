@@ -1,0 +1,69 @@
+"""Small pytree utilities shared across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def tree_size_bytes(tree: PyTree) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    leaves = jax.tree.leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape, dtype=np.int64)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_param_count(tree: PyTree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape, dtype=np.int64))
+    return total
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree)
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_flatten_with_paths(tree: PyTree) -> list[tuple[str, Any]]:
+    """Flatten to (dotted-path, leaf) pairs with deterministic ordering."""
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out.append((_path_str(path), leaf))
+    return out
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_path_str(p), x), tree)
+
+
+def assert_no_nans(tree: PyTree, where: str = "") -> None:
+    for path, leaf in tree_flatten_with_paths(tree):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            if bool(jnp.any(jnp.isnan(leaf))):
+                raise AssertionError(f"NaN at {where}:{path}")

@@ -1,0 +1,78 @@
+"""Property-test harness: uses `hypothesis` when installed, else a seeded
+mini fallback with the same surface (the container is offline; the tests are
+written against hypothesis' API and run unchanged under either backend)."""
+from __future__ import annotations
+
+import itertools
+import random
+from functools import wraps
+
+try:  # pragma: no cover - prefer real hypothesis when available
+    from hypothesis import given, settings, strategies as st  # type: ignore
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # rng -> value
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self.sample(rng)))
+
+        def filter(self, pred):
+            def sample(rng):
+                for _ in range(1000):
+                    v = self.sample(rng)
+                    if pred(v):
+                        return v
+                raise RuntimeError("filter failed to find a value")
+
+            return _Strategy(sample)
+
+    class st:  # type: ignore[no-redef]
+        @staticmethod
+        def integers(min_value=0, max_value=100):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=-1e3, max_value=1e3, allow_nan=False, allow_infinity=False, width=64):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=8):
+            return _Strategy(
+                lambda rng: [elem.sample(rng) for _ in range(rng.randint(min_size, max_size))]
+            )
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(lambda rng: tuple(e.sample(rng) for e in elems))
+
+    def settings(max_examples=25, **_kw):  # type: ignore[no-redef]
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies, **kw_strategies):  # type: ignore[no-redef]
+        def deco(fn):
+            @wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(fn, "_max_examples", 25)
+                for i in range(n):
+                    rng = random.Random(0xC0FFEE + i)
+                    vals = [s.sample(rng) for s in strategies]
+                    kvals = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                    fn(*args, *vals, **kwargs, **kvals)
+
+            return wrapper
+
+        return deco

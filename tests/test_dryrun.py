@@ -1,0 +1,54 @@
+"""Multi-pod dry-run smoke (subprocess: needs 512 placeholder devices, which
+must not leak into this test process).  The full 40-cell sweep is run by
+benchmarks/roofline_table.py; here one train cell + one decode cell + one
+multi-pod cell prove the machinery end-to-end."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_dryrun(*args, timeout=420):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=ROOT,
+    )
+    lines = [l for l in out.stdout.splitlines() if l.startswith("{")]
+    assert lines, f"no records: stdout={out.stdout[-2000:]} stderr={out.stderr[-2000:]}"
+    return [json.loads(l) for l in lines], out.returncode
+
+
+@pytest.mark.slow
+def test_single_pod_train_cell():
+    recs, rc = run_dryrun("--arch", "qwen2-0.5b", "--shape", "train_4k")
+    assert rc == 0
+    r = recs[0]
+    assert r["status"] == "ok" and r["n_devices"] == 256 and r["step"] == "train_step"
+    assert r["hlo_flops_per_dev"] > 0 and r["collective_bytes_per_dev"] > 0
+    assert r["bottleneck"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_single_pod_decode_cell():
+    recs, rc = run_dryrun("--arch", "qwen2-0.5b", "--shape", "decode_32k")
+    assert rc == 0 and recs[0]["status"] == "ok" and recs[0]["step"] == "serve_step"
+
+
+@pytest.mark.slow
+def test_multi_pod_cell():
+    recs, rc = run_dryrun("--arch", "qwen2-0.5b", "--shape", "train_4k", "--multi-pod")
+    assert rc == 0
+    r = recs[0]
+    assert r["status"] == "ok" and r["n_devices"] == 512 and r["mesh"] == "2x16x16"
+
+
+@pytest.mark.slow
+def test_long_500k_skip_for_pure_attention():
+    recs, rc = run_dryrun("--arch", "qwen2-0.5b", "--shape", "long_500k")
+    assert rc == 0
+    assert recs[0]["status"] == "skip" and "full-attention" in recs[0]["reason"]

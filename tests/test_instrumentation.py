@@ -1,0 +1,151 @@
+"""The paper's core claims as tests: USDT (tracepoints) + Uprobes semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import microbench
+from repro.core import tracepoints as tp
+from repro.core import uprobes
+from repro.core.events import EventLog
+
+
+# ---------------------------------------------------------------------------
+# USDT: static tracepoints
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_tracepoints_compile_away():
+    """USDT's defining property (stronger than a nop sled): with tracing off,
+    the instrumented program lowers to *byte-identical* HLO."""
+    x = microbench.make_inputs()
+
+    def approx_sqrt_workload(x):  # same name -> same HLO module name
+        def step(g, _):
+            return 0.5 * (g + x / g), None
+
+        g = jnp.maximum(x * 0.5, 1.0)
+        g, _ = jax.lax.scan(step, g, None, length=microbench.NEWTON_ITERS)
+        return g
+
+    hlo_plain = jax.jit(approx_sqrt_workload).lower(x).as_text()
+    hlo_inst = jax.jit(microbench.approx_sqrt_workload).lower(x).as_text()
+
+    def strip_meta(s):  # location metadata differs trivially
+        import re
+        return re.sub(r'loc\(.*?\)|metadata=\{[^}]*\}|#loc\d+ = .*', "", s)
+
+    assert strip_meta(hlo_inst) == strip_meta(hlo_plain)
+
+
+def test_tape_mode_collects_points():
+    x = microbench.make_inputs()
+    with tp.enable("tape"):
+        fn = jax.jit(tp.collect(microbench.approx_sqrt_workload))
+        out, tape = fn(x)
+    assert set(tape) == {"workload.enter", "workload.exit"}
+    val, fires = tape["workload.enter"]
+    assert float(val) == x.shape[0] and int(fires) == 1
+    np.testing.assert_allclose(out, jnp.sqrt(x), rtol=1e-4)
+
+
+def test_tape_agg_modes():
+    with tp.enable("tape"):
+
+        @tp.collect
+        def f(x):
+            for i in range(3):
+                tp.point("acc", x * (i + 1), agg="sum")
+                tp.point("peak", x * (i + 1), agg="max")
+                tp.point("hits", None)
+            return x
+
+        _, tape = jax.jit(f)(jnp.float32(2.0))
+    assert float(tape["acc"][0]) == 2.0 + 4.0 + 6.0
+    assert float(tape["peak"][0]) == 6.0
+    assert int(tape["hits"][0]) == 3
+
+
+def test_callback_mode_records_events():
+    log = EventLog()
+    x = microbench.make_inputs()
+    with tp.enable("callback", log=log):
+        # fresh lambda: jax.jit memoizes wrappers per function object, and the
+        # uninstrumented trace from another test must not be reused (USDT
+        # markers are compiled in at trace time).
+        fn = jax.jit(lambda v: microbench.approx_sqrt_workload(v))
+        jax.block_until_ready(fn(x))
+    jax.effects_barrier()
+    names = {e.name for e in log.events("probe")}
+    assert names == {"workload.enter", "workload.exit"}
+
+
+def test_disabled_is_noop_outside_context():
+    log = EventLog()
+    fn = jax.jit(microbench.approx_sqrt_workload)
+    jax.block_until_ready(fn(microbench.make_inputs()))
+    jax.effects_barrier()
+    assert len(log) == 0
+
+
+# ---------------------------------------------------------------------------
+# Uprobes: dynamic probes, no source change
+# ---------------------------------------------------------------------------
+
+
+def test_attach_detach_module_function():
+    from repro.configs import microbench as mb_module
+
+    log = EventLog()
+    reg = uprobes.ProbeRegistry(log)
+    reg.attach(mb_module, "approx_sqrt_workload", tap_output=True)
+    try:
+        fn = jax.jit(mb_module.approx_sqrt_workload)
+        out = fn(mb_module.make_inputs())
+        jax.block_until_ready(out)
+        jax.effects_barrier()
+    finally:
+        reg.detach_all()
+    names = [e.name for e in log.events("probe")]
+    assert any(n.endswith(":enter") for n in names)
+    assert any(n.endswith(":ret") for n in names)
+    assert any(n.endswith(":exit") for n in names)
+    # detached: original restored
+    assert not getattr(mb_module.approx_sqrt_workload, "__repro_probe__", False)
+
+
+def test_inject_probes_preserves_output_and_taps():
+    x = microbench.make_inputs()
+    want = jax.jit(microbench.approx_sqrt_workload)(x)
+    probed = uprobes.inject_probes(
+        microbench.approx_sqrt_workload, uprobes.by_primitive("scan"), mode="tap"
+    )
+    got, taps = probed(x)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+    assert len(taps) >= 1 and all(k.startswith("scan#") for k in taps)
+
+
+def test_inject_probes_callback_events():
+    log = EventLog()
+    probed = uprobes.inject_probes(
+        microbench.approx_sqrt_workload,
+        uprobes.by_primitive("scan"),
+        mode="callback",
+        log=log,
+    )
+    fn = jax.jit(probed)
+    jax.block_until_ready(fn(microbench.make_inputs()))
+    jax.effects_barrier()
+    assert len(log.events("probe")) >= 1
+
+
+def test_by_scope_matcher():
+    def f(x):
+        with jax.named_scope("hot"):
+            y = x @ x
+        return y + 1
+
+    x = jnp.ones((8, 8))
+    probed = uprobes.inject_probes(f, uprobes.by_scope("hot"), mode="tap")
+    out, taps = probed(x)
+    np.testing.assert_allclose(out, x @ x + 1)
+    assert any("dot_general" in k for k in taps)
