@@ -8,6 +8,7 @@ Sections:
   3. SDFG     — IR extraction + backend assignment across all 10 archs
   4. Kernels  — hot-spot micro-benches + TPU roofline projections
   5. Roofline — 40-cell (arch × shape) table from dry-run records, if present
+  6. Dispatch — static vs profile-guided backend placement (repro.dispatch)
 """
 from __future__ import annotations
 
@@ -56,6 +57,11 @@ def main() -> None:
         results["roofline_cells"] = len(recs)
     else:
         print(f"(no records at {recs_path}; run the dry-run sweep to fill this section)")
+
+    print("\n########## 6. Dispatch: static vs profile-guided placement ##########")
+    from benchmarks import dispatch_bench
+
+    results["dispatch"] = dispatch_bench.run(fast=args.fast)
 
     with open(os.path.join(OUT_DIR, "out_all.json"), "w") as f:
         json.dump(results, f, indent=1, default=str)

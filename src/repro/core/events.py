@@ -58,6 +58,17 @@ class EventLog:
         with self._lock:
             self._events.clear()
 
+    def to_json(self) -> str:
+        """JSON-serialise the log (payloads fall back to repr when needed)."""
+        import json
+
+        def default(obj: Any) -> str:
+            return repr(obj)
+
+        with self._lock:
+            rows = [dataclasses.asdict(e) for e in self._events]
+        return json.dumps(rows, default=default)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._events)

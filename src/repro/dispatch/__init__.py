@@ -1,0 +1,49 @@
+"""Profile-guided heterogeneous dispatch — closing the paper's loop.
+
+The source paper motivates performance analysis as the input to *placement*:
+"determining the most suitable platform for dispatching tasks, ensuring that
+workloads are allocated to the processing units where they can execute most
+effectively".  The rest of this repo measures (uprobes, tracepoints, SDFG,
+roofline); this package acts on the measurements:
+
+    registry.py    dispatchable backend targets (Pallas / chunked / ref /
+                   interpret) with ChipSpec-derived static cost parameters
+    cost.py        a-priori pricing of an SDFG region per backend (roofline)
+    profiles.py    online profile store — measured samples override estimates
+                   once warm (the Adaptyst feedback loop)
+    dispatcher.py  argmin-cost routing of ops / serving requests / train
+                   steps, every decision recorded as a ``dispatch`` event
+
+Typical use::
+
+    from repro.dispatch import Dispatcher, DispatchConfig, default_registry
+
+    disp = Dispatcher(DispatchConfig(policy="profiled"), log=log)
+    out = disp.dispatch("decode_step", {"chunked": f1, "ref": f2}, *args)
+"""
+from repro.dispatch.cost import CostEstimate, estimate_callable, estimate_region, estimate_sdfg
+from repro.dispatch.dispatcher import DispatchConfig, DispatchDecision, Dispatcher, with_impl
+from repro.dispatch.profiles import ProfileStore, signature
+from repro.dispatch.registry import (
+    BackendRegistry,
+    BackendTarget,
+    default_registry,
+    host_registry,
+)
+
+__all__ = [
+    "BackendRegistry",
+    "BackendTarget",
+    "CostEstimate",
+    "DispatchConfig",
+    "DispatchDecision",
+    "Dispatcher",
+    "ProfileStore",
+    "default_registry",
+    "estimate_callable",
+    "estimate_region",
+    "estimate_sdfg",
+    "host_registry",
+    "signature",
+    "with_impl",
+]

@@ -1,0 +1,114 @@
+"""A-priori cost model: price an SDFG region per backend target.
+
+The estimate reuses the roofline decomposition (compute vs memory vs
+interconnect terms against ChipSpec peaks) with the target's static factors
+from :mod:`repro.dispatch.registry` applied on top — so before anything has
+ever run, every (region, backend) pair has a defensible seconds figure.
+These estimates seed the dispatcher; measured profiles replace them once warm
+(see :mod:`repro.dispatch.profiles`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core import sdfg as sdfg_mod
+from repro.core.sdfg import HBM, HOST, ICI, MXU, SDFG, Region, VPU
+from repro.dispatch.registry import BackendTarget
+from repro.hw.specs import ChipSpec, default_chip
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """Priced execution of one region (or whole graph) on one backend."""
+
+    backend: str
+    seconds: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    t_host: float
+    source: str = "roofline"  # roofline | measured
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+            "host": self.t_host,
+        }
+        return max(terms, key=terms.get)
+
+
+def estimate_region(
+    region: Region,
+    target: BackendTarget,
+    chip: Optional[ChipSpec] = None,
+) -> CostEstimate:
+    """Roofline pricing of ``region`` on ``target``.
+
+    max(compute, memory) + collective + host + launch overhead.  The compute
+    term uses the efficiency of the component class that *bounds* the region
+    (its Adaptyst match); the memory term applies the target's byte
+    amplification (reference paths materialise intermediates the fused paths
+    never write).
+    """
+    chip = chip or default_chip()
+    match = region.match(chip)
+    eff = max(target.efficiency(match), 1e-3)
+    t_compute = region.flops / (chip.peak_flops_bf16 * eff)
+    t_memory = region.bytes * target.byte_amplification / chip.hbm_bw
+    ici_bytes = float(region.backends.get(ICI, 0.0))
+    t_collective = ici_bytes / chip.ici_bisection_bw
+    host_bytes = float(region.backends.get(HOST, 0.0))
+    t_host = host_bytes / chip.host_bw
+    seconds = target.launch_overhead_s + max(t_compute, t_memory) + t_collective + t_host
+    return CostEstimate(
+        backend=target.name,
+        seconds=seconds,
+        t_compute=t_compute,
+        t_memory=t_memory,
+        t_collective=t_collective,
+        t_host=t_host,
+    )
+
+
+def estimate_sdfg(
+    graph: SDFG,
+    target: BackendTarget,
+    chip: Optional[ChipSpec] = None,
+) -> dict[str, CostEstimate]:
+    """Per-region estimates for a whole extracted graph."""
+    chip = chip or default_chip()
+    return {name: estimate_region(r, target, chip) for name, r in graph.regions().items()}
+
+
+def total_seconds(estimates: dict[str, CostEstimate]) -> float:
+    return sum(e.seconds for e in estimates.values())
+
+
+def estimate_callable(
+    fn: Callable,
+    *args,
+    target: BackendTarget,
+    chip: Optional[ChipSpec] = None,
+    **kwargs,
+) -> CostEstimate:
+    """Price a whole callable on ``target`` as a single fused region.
+
+    The jaxpr is extracted from the *canonical* formulation of the op (the
+    caller should trace the reference/chunked path — a Pallas ``pallas_call``
+    is opaque to the jaxpr walk); the target factors then differentiate the
+    implementation variants over identical abstract work.
+    """
+    chip = chip or default_chip()
+    graph = sdfg_mod.extract(fn, *args, **kwargs)
+    merged = Region("<callable>")
+    for r in graph.regions().values():
+        merged.flops += r.flops
+        merged.bytes += r.bytes
+        merged.nodes += r.nodes
+        for k, v in r.backends.items():
+            merged.backends[k] += v
+    return estimate_region(merged, target, chip)

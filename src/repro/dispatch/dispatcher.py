@@ -1,0 +1,229 @@
+"""The dispatcher: argmin-cost placement, every decision an EventLog event.
+
+Three policies (the ``--dispatch`` flag on serve/train):
+
+    static     always the configured backend (the baseline everyone ships)
+    roofline   argmin over a-priori cost-model estimates (act on analysis)
+    profiled   roofline to open, then measured-beats-estimated: each candidate
+               is explored until warm, after which the measured mean decides
+               (the Adaptyst loop — analysis seeds, profiles correct)
+
+``dispatch()`` both *decides* and *executes*: it runs the chosen variant,
+blocks to completion, feeds the wall-time back into the
+:class:`~repro.dispatch.profiles.ProfileStore`, and records a ``dispatch``
+event whose payload carries op, backend, estimate, measurement and policy —
+the paper's "performance analysis determines the dispatch platform", with a
+paper-trail.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Mapping, Optional
+
+import jax
+
+from repro.core.events import GLOBAL_LOG, EventLog
+from repro.core.sdfg import SDFG, Region
+from repro.dispatch.cost import CostEstimate, estimate_region
+from repro.dispatch.profiles import ProfileStore, signature
+from repro.dispatch.registry import BackendRegistry, host_registry
+from repro.hw.specs import ChipSpec
+
+POLICIES = ("static", "roofline", "profiled")
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    policy: str = "profiled"
+    static_backend: str = "chunked"  # used by policy="static"
+    min_samples: int = 2  # profile warmth threshold
+    record_events: bool = True
+
+    def __post_init__(self) -> None:
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, got {self.policy!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchDecision:
+    op: str
+    backend: str
+    sig: str
+    est_s: float
+    source: str  # static | roofline | measured | explore
+    policy: str
+
+    def payload(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class Dispatcher:
+    """Routes ops / requests / steps to the argmin-cost backend target."""
+
+    def __init__(
+        self,
+        cfg: Optional[DispatchConfig] = None,
+        *,
+        registry: Optional[BackendRegistry] = None,
+        store: Optional[ProfileStore] = None,
+        log: Optional[EventLog] = None,
+    ) -> None:
+        self.cfg = cfg or DispatchConfig()
+        self.registry = registry if registry is not None else host_registry()
+        self.store = store or ProfileStore(min_samples=self.cfg.min_samples)
+        self.log = GLOBAL_LOG if log is None else log
+        self.decisions: list[DispatchDecision] = []
+
+    @property
+    def chip(self) -> ChipSpec:
+        return self.registry.chip
+
+    def backends(self) -> list[str]:
+        return self.registry.names()
+
+    # -- decision ------------------------------------------------------------
+
+    def choose(
+        self,
+        op: str,
+        sig: str,
+        estimates: Mapping[str, float],
+    ) -> DispatchDecision:
+        """Pick a backend given per-backend a-priori estimates (seconds).
+
+        ``estimates`` keys restrict the candidate set (callers pass only the
+        variants they actually compiled).
+        """
+        candidates = [b for b in estimates if b in self.registry]
+        if not candidates:
+            raise ValueError(f"no registered candidates among {sorted(estimates)}")
+        policy = self.cfg.policy
+        if policy == "static":
+            if self.cfg.static_backend in candidates:
+                backend, source = self.cfg.static_backend, "static"
+            else:  # pinned backend unavailable here (e.g. pallas off-TPU)
+                backend, source = candidates[0], "static-fallback"
+            decision = DispatchDecision(op, backend, sig, estimates[backend], source, policy)
+        elif policy == "roofline":
+            backend = min(candidates, key=lambda b: estimates[b])
+            decision = DispatchDecision(op, backend, sig, estimates[backend], "roofline", policy)
+        else:  # profiled
+            cold = [b for b in candidates if not self.store.warm(op, b, sig)]
+            if cold:
+                # explore the least-sampled cold candidate (roofline order
+                # breaks ties so the best a-priori guess is measured first)
+                backend = min(
+                    cold, key=lambda b: (self.store.samples(op, b, sig), estimates[b])
+                )
+                decision = DispatchDecision(op, backend, sig, estimates[backend], "explore", policy)
+            else:
+                costs = {
+                    b: self.store.combined_cost(op, b, sig, estimates[b])
+                    for b in candidates
+                }
+                backend = min(candidates, key=lambda b: costs[b][0])
+                decision = DispatchDecision(
+                    op, backend, sig, costs[backend][0], costs[backend][1], policy
+                )
+        self.decisions.append(decision)
+        return decision
+
+    # -- decide + execute + feed back -----------------------------------------
+
+    def dispatch(
+        self,
+        op: str,
+        variants: Mapping[str, Callable],
+        *args: Any,
+        estimates: Optional[Mapping[str, float]] = None,
+        sig: Optional[str] = None,
+        **kwargs: Any,
+    ) -> Any:
+        """Route one call: choose a variant, run it, profile it, log it.
+
+        ``sig`` lets hot callers supply a cheap profile key (e.g. the token
+        array's shape) instead of walking a large params/state pytree.
+        """
+        sig = sig if sig is not None else signature(*args)
+        if estimates is None:
+            # no analysis supplied: flat priors, registry-order exploration
+            estimates = {
+                b: self.registry.get(b).launch_overhead_s
+                for b in variants
+                if b in self.registry
+            }
+        decision = self.choose(op, sig, {b: estimates[b] for b in variants if b in estimates})
+        fn = variants[decision.backend]
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        self.store.record(op, decision.backend, sig, dt)
+        if self.cfg.record_events:
+            payload = decision.payload()
+            payload["measured_s"] = dt
+            self.log.record("dispatch", op, payload)
+        return out
+
+    # -- whole-graph placement -------------------------------------------------
+
+    def estimates_for_region(
+        self, region: Region, backends: Optional[list[str]] = None
+    ) -> dict[str, CostEstimate]:
+        targets = self.registry.targets(backends)
+        return {t.name: estimate_region(region, t, self.chip) for t in targets}
+
+    def partition(
+        self, graph: SDFG, *, backends: Optional[list[str]] = None
+    ) -> dict[str, DispatchDecision]:
+        """Assign every SDFG region to its argmin-cost backend.
+
+        Uses the same choose() path as runtime dispatch, so profiled mode
+        honours any warm measurements keyed by region name, and every
+        assignment lands in the EventLog.
+        """
+        placement: dict[str, DispatchDecision] = {}
+        for name, region in graph.regions().items():
+            ests = {b: e.seconds for b, e in self.estimates_for_region(region, backends).items()}
+            decision = self.choose(f"region:{name}", "<sdfg>", ests)
+            placement[name] = decision
+            if self.cfg.record_events:
+                self.log.record("dispatch", f"region:{name}", decision.payload())
+        return placement
+
+    # -- reporting -------------------------------------------------------------
+
+    def summary(self) -> dict[str, Any]:
+        """Decision counts per (op, backend) — for driver JSON output."""
+        by_op: dict[str, dict[str, int]] = {}
+        for d in self.decisions:
+            by_op.setdefault(d.op, {}).setdefault(d.backend, 0)
+            by_op[d.op][d.backend] += 1
+        return {
+            "policy": self.cfg.policy,
+            "decisions": len(self.decisions),
+            "by_op": by_op,
+            "profiled_keys": len(self.store),
+        }
+
+
+def with_impl(impl: str, fn: Callable) -> Callable:
+    """Bind a kernels.ops impl choice into ``fn`` at trace time.
+
+    ``jax.jit(with_impl("ref", step))`` bakes the reference kernels into that
+    compiled variant: the wrapper body runs while JAX traces, so the impl
+    override is live exactly when :func:`repro.kernels.ops._resolve` reads it.
+    """
+    from repro.kernels import ops
+
+    def wrapped(*args: Any, **kwargs: Any):
+        prev = ops._IMPL
+        ops.set_default_impl(impl)
+        try:
+            return fn(*args, **kwargs)
+        finally:
+            ops.set_default_impl(prev)
+
+    wrapped.__name__ = f"{getattr(fn, '__name__', 'fn')}__{impl}"
+    return wrapped

@@ -1,0 +1,161 @@
+"""Online profile store: measured samples override a-priori estimates.
+
+This is the Adaptyst feedback loop.  The cost model in
+:mod:`repro.dispatch.cost` prices every (op, backend, shape) a priori; each
+real execution the dispatcher routes is timed and folded back in here.  Once
+a key is *warm* (``min_samples`` observations) the measured mean beats the
+estimate — the dispatcher stops trusting the model and starts trusting the
+hardware.
+
+Samples arrive from three directions:
+
+* :meth:`ProfileStore.record` — the dispatcher's own timed executions;
+* :meth:`ProfileStore.observe_timing` — an :class:`repro.core.overhead.TimingStats`
+  from the hyperfine harness (1000-run benchmark protocols);
+* :meth:`ProfileStore.ingest_event_log` — ``dispatch`` events recorded in an
+  :class:`repro.core.events.EventLog` by a previous run (profiles persist
+  across processes via :meth:`to_json` / :meth:`from_json`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional
+
+from repro.core.events import EventLog
+from repro.core.overhead import TimingStats
+
+
+def signature(*args: Any) -> str:
+    """Shape/dtype signature of a call's array arguments (pytrees allowed)."""
+    import jax
+
+    parts: list[str] = []
+    for leaf in jax.tree.leaves(args):
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is not None and dtype is not None:
+            parts.append(f"{dtype}[{','.join(map(str, shape))}]")
+    sig = ";".join(parts) if parts else "<scalar>"
+    if len(sig) > 256:  # train-state pytrees: stable digest instead of a novel
+        import hashlib
+
+        sig = f"tree:{len(parts)}leaves:{hashlib.sha1(sig.encode()).hexdigest()[:16]}"
+    return sig
+
+
+def profile_key(op: str, backend: str, sig: str) -> str:
+    return f"{op}|{backend}|{sig}"
+
+
+@dataclasses.dataclass
+class ProfileEntry:
+    """Welford running stats over observed wall-times for one key."""
+
+    count: int = 0
+    mean_s: float = 0.0
+    m2: float = 0.0
+    min_s: float = float("inf")
+
+    def add(self, seconds: float) -> None:
+        self.count += 1
+        delta = seconds - self.mean_s
+        self.mean_s += delta / self.count
+        self.m2 += delta * (seconds - self.mean_s)
+        self.min_s = min(self.min_s, seconds)
+
+    @property
+    def variance(self) -> float:
+        return self.m2 / (self.count - 1) if self.count > 1 else 0.0
+
+
+class ProfileStore:
+    def __init__(self, min_samples: int = 2) -> None:
+        self.min_samples = min_samples
+        self._entries: dict[str, ProfileEntry] = {}
+
+    # -- writers -------------------------------------------------------------
+
+    def record(self, op: str, backend: str, sig: str, seconds: float) -> None:
+        key = profile_key(op, backend, sig)
+        self._entries.setdefault(key, ProfileEntry()).add(seconds)
+
+    def observe_timing(self, op: str, backend: str, sig: str, stats: TimingStats) -> None:
+        """Fold a hyperfine benchmark result in as ``stats.runs`` samples."""
+        key = profile_key(op, backend, sig)
+        e = self._entries.setdefault(key, ProfileEntry())
+        mean_s = stats.mean_ms / 1e3
+        for _ in range(max(stats.runs, 1)):
+            e.add(mean_s)
+        e.min_s = min(e.min_s, stats.min_ms / 1e3)
+
+    def ingest_event_log(self, log: EventLog) -> int:
+        """Replay ``dispatch`` events (payload dicts) from a previous run."""
+        n = 0
+        for ev in log.events(kind="dispatch"):
+            p = ev.payload
+            if not isinstance(p, dict) or "measured_s" not in p:
+                continue
+            self.record(p["op"], p["backend"], p.get("sig", "<scalar>"), p["measured_s"])
+            n += 1
+        return n
+
+    # -- readers -------------------------------------------------------------
+
+    def entry(self, op: str, backend: str, sig: str) -> Optional[ProfileEntry]:
+        return self._entries.get(profile_key(op, backend, sig))
+
+    def samples(self, op: str, backend: str, sig: str) -> int:
+        e = self.entry(op, backend, sig)
+        return e.count if e else 0
+
+    def warm(self, op: str, backend: str, sig: str) -> bool:
+        return self.samples(op, backend, sig) >= self.min_samples
+
+    def lookup(self, op: str, backend: str, sig: str) -> Optional[float]:
+        """Measured seconds, or None if the key is not warm yet.
+
+        Uses the *minimum* observed wall-time (hyperfine's robust statistic):
+        the first sample of a jitted variant includes compilation, and a mean
+        polluted by one cold call would mis-rank backends for the rest of the
+        run.  With ``min_samples >= 2`` the minimum is a warm execution.
+        """
+        e = self.entry(op, backend, sig)
+        if e is None or e.count < self.min_samples:
+            return None
+        return e.min_s
+
+    def combined_cost(self, op: str, backend: str, sig: str, estimate_s: float) -> tuple[float, str]:
+        """Measured-beats-estimated: (seconds, source)."""
+        measured = self.lookup(op, backend, sig)
+        if measured is not None:
+            return measured, "measured"
+        return estimate_s, "roofline"
+
+    # -- persistence ---------------------------------------------------------
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "min_samples": self.min_samples,
+                "entries": {
+                    k: {"count": e.count, "mean_s": e.mean_s, "m2": e.m2, "min_s": e.min_s}
+                    for k, e in self._entries.items()
+                },
+            },
+            indent=1,
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "ProfileStore":
+        raw = json.loads(text)
+        store = cls(min_samples=raw.get("min_samples", 2))
+        for k, d in raw.get("entries", {}).items():
+            store._entries[k] = ProfileEntry(
+                count=d["count"], mean_s=d["mean_s"], m2=d.get("m2", 0.0),
+                min_s=d.get("min_s", float("inf")),
+            )
+        return store
+
+    def __len__(self) -> int:
+        return len(self._entries)

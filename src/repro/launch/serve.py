@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core.events import EventLog
+from repro.dispatch import DispatchConfig, Dispatcher
 from repro.models import lm
 from repro.serving.engine import Engine, ServeConfig
 
@@ -29,6 +30,12 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--dispatch", choices=("off", "static", "roofline", "profiled"), default="off",
+        help="profile-guided backend placement for prefill/decode (repro.dispatch)",
+    )
+    ap.add_argument("--dispatch-backend", default="chunked",
+                    help="backend pinned by --dispatch static")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -37,6 +44,12 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     params = lm.init_params(cfg, key)
     log = EventLog()
+    dispatcher = None
+    if args.dispatch != "off":
+        dispatcher = Dispatcher(
+            DispatchConfig(policy=args.dispatch, static_backend=args.dispatch_backend),
+            log=log,
+        )
     eng = Engine(
         cfg,
         params,
@@ -47,6 +60,7 @@ def main() -> None:
             seed=args.seed,
         ),
         log=log,
+        dispatcher=dispatcher,
     )
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -57,19 +71,19 @@ def main() -> None:
     wall = time.time() - t0
     total_new = sum(len(v) for v in results.values())
     durations = log.durations("prefill")
-    print(
-        json.dumps(
-            {
-                "arch": cfg.name,
-                "requests": len(results),
-                "generated_tokens": total_new,
-                "tokens_per_s": round(total_new / wall, 1),
-                "mean_prefill_ms": round(1e3 * float(np.mean(durations)), 2) if durations else None,
-                "wall_s": round(wall, 2),
-                "sample": results[min(results)][:8],
-            }
-        )
-    )
+    rec = {
+        "arch": cfg.name,
+        "requests": len(results),
+        "generated_tokens": total_new,
+        "tokens_per_s": round(total_new / wall, 1),
+        "mean_prefill_ms": round(1e3 * float(np.mean(durations)), 2) if durations else None,
+        "wall_s": round(wall, 2),
+        "sample": results[min(results)][:8],
+    }
+    if dispatcher is not None:
+        rec["dispatch"] = dispatcher.summary()
+        rec["dispatch_events"] = len(log.events(kind="dispatch"))
+    print(json.dumps(rec))
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ from jax.sharding import Mesh
 from repro.configs import get_config, reduced
 from repro.core.events import EventLog
 from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.dispatch import DispatchConfig, Dispatcher, with_impl
 from repro.distributed import sharding as shd
 from repro.runtime.supervisor import FailureInjector, Supervisor, SupervisorConfig
 from repro.training.step import (
@@ -63,6 +64,12 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--fail-at", default="", help="comma list of steps to inject failures")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--dispatch", choices=("off", "static", "roofline", "profiled"), default="off",
+        help="profile-guided kernel-backend placement per train step (repro.dispatch)",
+    )
+    ap.add_argument("--dispatch-backend", default="chunked",
+                    help="backend pinned by --dispatch static")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -94,6 +101,21 @@ def main() -> None:
             out_shardings=(state_shd, None),
             donate_argnums=(0,),
         )
+        dispatcher = None
+        step_variants = None
+        if args.dispatch != "off":
+            dispatcher = Dispatcher(
+                DispatchConfig(policy=args.dispatch, static_backend=args.dispatch_backend)
+            )
+            step_variants = {
+                t.name: jax.jit(
+                    with_impl(t.impl, make_train_step(cfg, tcfg)),
+                    in_shardings=(state_shd, None),
+                    out_shardings=(state_shd, None),
+                    donate_argnums=(0,),
+                )
+                for t in dispatcher.registry.targets()
+            }
 
         data = SyntheticLM(
             DataConfig(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
@@ -104,6 +126,8 @@ def main() -> None:
             return {k: jnp.asarray(v) for k, v in b.items()}
 
         log = EventLog()
+        if dispatcher is not None:
+            dispatcher.log = log
         fail_at = tuple(int(s) for s in args.fail_at.split(",") if s)
         sup = Supervisor(
             SupervisorConfig(
@@ -117,6 +141,8 @@ def main() -> None:
             state_shardings=state_shd,
             log=log,
             failures=FailureInjector(fail_at),
+            dispatcher=dispatcher,
+            step_variants=step_variants,
         )
         t0 = time.time()
         out = sup.run()
@@ -124,21 +150,21 @@ def main() -> None:
 
     losses = [float(m["loss"]) for m in out["metrics"]]
     tok_per_step = args.batch * args.seq
-    print(
-        json.dumps(
-            {
-                "arch": cfg.name,
-                "mesh": args.mesh,
-                "steps": out["steps"],
-                "restarts": out["restarts"],
-                "stragglers": out["stragglers"],
-                "first_loss": round(losses[0], 4),
-                "last_loss": round(losses[-1], 4),
-                "tokens_per_s": round(out["steps"] * tok_per_step / wall),
-                "wall_s": round(wall, 1),
-            }
-        )
-    )
+    rec = {
+        "arch": cfg.name,
+        "mesh": args.mesh,
+        "steps": out["steps"],
+        "restarts": out["restarts"],
+        "stragglers": out["stragglers"],
+        "first_loss": round(losses[0], 4),
+        "last_loss": round(losses[-1], 4),
+        "tokens_per_s": round(out["steps"] * tok_per_step / wall),
+        "wall_s": round(wall, 1),
+    }
+    if dispatcher is not None:
+        rec["dispatch"] = dispatcher.summary()
+        rec["dispatch_events"] = len(log.events(kind="dispatch"))
+    print(json.dumps(rec))
 
 
 if __name__ == "__main__":

@@ -23,12 +23,14 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable, Iterator, Optional
+from typing import Any, Callable, Iterator, Mapping, Optional
 
 import jax
 
 from repro.checkpoint import AsyncCheckpointer, latest_step, restore
 from repro.core.events import GLOBAL_LOG, EventLog
+from repro.dispatch.dispatcher import Dispatcher
+from repro.dispatch.profiles import signature
 
 PyTree = Any
 
@@ -77,10 +79,16 @@ class Supervisor:
         state_shardings: Optional[PyTree] = None,
         log: Optional[EventLog] = None,
         failures: Optional[FailureInjector] = None,
+        dispatcher: Optional[Dispatcher] = None,
+        step_variants: Optional[Mapping[str, Callable]] = None,
     ) -> None:
         self.cfg = cfg
         self.train_step = train_step
         self.batch_fn = batch_fn
+        # profile-guided placement: when both are given, each step routes to
+        # the argmin-cost compiled variant (see repro.dispatch)
+        self.dispatcher = dispatcher
+        self.step_variants = dict(step_variants) if step_variants else None
         self.state = init_state
         self.state_shardings = state_shardings
         self.log = GLOBAL_LOG if log is None else log
@@ -130,7 +138,13 @@ class Supervisor:
                     self.failures.maybe_fail(self.step)
                     t0 = time.monotonic()
                     batch = self.batch_fn(self.step)
-                    self.state, metrics = self.train_step(self.state, batch)
+                    if self.dispatcher is not None and self.step_variants:
+                        self.state, metrics = self.dispatcher.dispatch(
+                            "train_step", self.step_variants, self.state, batch,
+                            sig=signature(batch),  # state pytree is fixed-shape
+                        )
+                    else:
+                        self.state, metrics = self.train_step(self.state, batch)
                     jax.block_until_ready(metrics)
                     dt = time.monotonic() - t0
                 deadline = self._deadline()

@@ -25,6 +25,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.events import GLOBAL_LOG, EventLog
+from repro.dispatch.cost import estimate_callable
+from repro.dispatch.dispatcher import Dispatcher, with_impl
+from repro.dispatch.profiles import signature
 from repro.models import lm
 
 
@@ -55,11 +58,13 @@ class Engine:
         scfg: ServeConfig,
         *,
         log: Optional[EventLog] = None,
+        dispatcher: Optional[Dispatcher] = None,
     ) -> None:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.log = GLOBAL_LOG if log is None else log
+        self.dispatcher = dispatcher
         B, S = scfg.max_batch, scfg.max_seq
         self.caches = lm.init_caches(cfg, B, S)
         self.cur_pos = np.zeros(B, np.int32)  # next position per slot
@@ -68,12 +73,56 @@ class Engine:
         self._rid = itertools.count()
         self._key = jax.random.PRNGKey(scfg.seed)
 
-        # compiled surfaces (static shapes)
-        self._prefill = jax.jit(
-            lambda p, t: lm.prefill(p, cfg, t, max_seq=S), static_argnums=()
-        )
-        self._decode = jax.jit(
-            lambda p, t, c, ch: lm.decode_step(p, cfg, t, c, ch), donate_argnums=(3,)
+        # compiled surfaces (static shapes).  With a dispatcher, one compiled
+        # variant per backend target (kernel impl baked in at trace time) and
+        # the dispatcher routes each call to the argmin-cost variant.
+        prefill_fn = lambda p, t: lm.prefill(p, cfg, t, max_seq=S)  # noqa: E731
+        decode_fn = lambda p, t, c, ch: lm.decode_step(p, cfg, t, c, ch)  # noqa: E731
+        if dispatcher is None:
+            self._prefill = jax.jit(prefill_fn, static_argnums=())
+            self._decode = jax.jit(decode_fn, donate_argnums=(3,))
+        else:
+            self._prefill_variants = {
+                t.name: jax.jit(with_impl(t.impl, prefill_fn))
+                for t in dispatcher.registry.targets()
+            }
+            self._decode_variants = {
+                t.name: jax.jit(with_impl(t.impl, decode_fn), donate_argnums=(3,))
+                for t in dispatcher.registry.targets()
+            }
+            self._canonical = {"serve_prefill": prefill_fn, "serve_decode": decode_fn}
+            self._est_cache: dict = {}
+            self._prefill = lambda p, t: self._dispatched("serve_prefill", self._prefill_variants, p, t)
+            self._decode = lambda p, t, c, ch: self._dispatched(
+                "serve_decode", self._decode_variants, p, t, c, ch
+            )
+
+    def _dispatched(self, op: str, variants: dict, *args: Any) -> Any:
+        """Route one compiled-surface call through the dispatcher.
+
+        A-priori costs come from pricing the op's canonical (chunked)
+        formulation per backend via the SDFG/roofline machinery, cached per
+        argument signature; the dispatcher folds measured wall-times on top.
+        The profile key is the token array's signature — params/caches are
+        fixed per engine, and walking their pytree every tick would cost more
+        than a decode step.
+        """
+        sig = signature(args[1])  # tokens: distinguishes prefill buckets
+        if self.dispatcher.cfg.policy == "static":
+            # pinned backend: the SDFG pricing would be computed only to be
+            # logged — skip the extra trace per prompt-length bucket
+            return self.dispatcher.dispatch(op, variants, *args, sig=sig)
+        key = (op, sig)
+        if key not in self._est_cache:
+            canonical = with_impl("chunked", self._canonical[op])
+            self._est_cache[key] = {
+                t.name: estimate_callable(
+                    canonical, *args, target=t, chip=self.dispatcher.chip
+                ).seconds
+                for t in self.dispatcher.registry.targets()
+            }
+        return self.dispatcher.dispatch(
+            op, variants, *args, estimates=self._est_cache[key], sig=sig
         )
 
     # -- client API ----------------------------------------------------------

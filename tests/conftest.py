@@ -5,6 +5,20 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test (dry-run subprocesses)")
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _reset_global_event_log():
+    """Instrumentation and dispatch state must not leak across tests: any
+    events a test records in the shared GLOBAL_LOG are dropped afterwards."""
+    from repro.core.events import GLOBAL_LOG
+
+    yield
+    GLOBAL_LOG.clear()

@@ -66,13 +66,16 @@ except ImportError:
         def deco(fn):
             @wraps(fn)
             def wrapper(*args, **kwargs):
-                n = getattr(fn, "_max_examples", 25)
+                n = getattr(wrapper, "_max_examples", 25)
                 for i in range(n):
                     rng = random.Random(0xC0FFEE + i)
                     vals = [s.sample(rng) for s in strategies]
                     kvals = {k: s.sample(rng) for k, s in kw_strategies.items()}
                     fn(*args, *vals, **kwargs, **kvals)
 
+            # pytest resolves fixture names through __wrapped__; the original
+            # fn's strategy parameters must not be mistaken for fixtures.
+            del wrapper.__wrapped__
             return wrapper
 
         return deco
