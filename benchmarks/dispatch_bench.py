@@ -57,20 +57,24 @@ def _attn_args(S: int, Hq: int = 4, Hkv: int = 2, D: int = 32):
     return (q, k, v)
 
 
-def kernel_workload(fast: bool) -> dict:
-    """Workload A: per-(op, shape) argmin beats any single static backend."""
-    backends = [t.name for t in host_registry().targets()]
-    reps = 5 if fast else 10
+def _cases(fast: bool) -> list:
     # the recurrent scan favours the stepwise reference path on this backend;
     # attention favours the chunked online-softmax path — no static choice
     # wins both, which is the dispatcher's reason to exist.  Shapes are large
     # enough that the margins (5-10x) dwarf timer + dispatch bookkeeping noise.
-    cases = [
+    return [
         ("rwkv6_scan", lambda impl: jax.jit(lambda *a: ops.rwkv6_scan(*a, impl=impl)),
          _rwkv_args(512)),
         ("attention", lambda impl: jax.jit(lambda *a: ops.attention(*a, causal=True, impl=impl)),
          _attn_args(512 if fast else 1024, Hq=8, Hkv=4, D=64)),
     ]
+
+
+def kernel_workload(fast: bool) -> dict:
+    """Workload A: per-(op, shape) argmin beats any single static backend."""
+    backends = [t.name for t in host_registry().targets()]
+    reps = 5 if fast else 10
+    cases = _cases(fast)
 
     # static placements: one backend for the whole suite
     static_ms = {b: 0.0 for b in backends}
@@ -112,6 +116,69 @@ def kernel_workload(fast: bool) -> dict:
         "profiled_chosen": chosen,
         "dispatch_events": len(log.events(kind="dispatch")),
         "profiled_beats_or_matches_best": profiled_ms <= static_ms[best] * 1.10,
+    }
+
+
+def warmstart_workload(
+    fast: bool, profile_in: str | None = None, profile_out: str | None = None
+) -> dict:
+    """Workload C: cross-run profile persistence (the --profile-in crossover).
+
+    A cold profiled dispatcher must explore every (op, backend) pair before
+    its store is warm; a dispatcher warm-started from a previous run's
+    ProfileStore skips that phase and lands on the steady-state backend from
+    the first dispatch.  Measured here as the count of ``source == explore``
+    decisions, cold vs warm.
+    """
+    cases = _cases(fast)
+    rounds = 2 * len(host_registry().targets()) + 3
+
+    def run_profiled(store):
+        log = EventLog()
+        disp = Dispatcher(
+            DispatchConfig(policy="profiled", min_samples=2), log=log, store=store
+        )
+        variants = [
+            {t.name: make(t.impl) for t in disp.registry.targets()} for _, make, _ in cases
+        ]
+        for _ in range(rounds):
+            for (name, _, args), vs in zip(cases, variants):
+                disp.dispatch(name, vs, *args)
+        steady = {}
+        for name, _, _ in cases:
+            steady[name] = [d for d in disp.decisions if d.op == name][-1].backend
+        return disp, steady
+
+    cold_disp, cold_steady = run_profiled(None)
+    if profile_out:
+        with open(profile_out, "w") as f:
+            f.write(cold_disp.store.to_json())
+
+    if profile_in is not None:
+        from repro.trace import load_profile_store
+
+        warm_store = load_profile_store(profile_in)
+    else:
+        # round-trip through JSON: exactly what --profile-out → --profile-in does
+        from repro.dispatch.profiles import ProfileStore
+
+        warm_store = ProfileStore.from_json(cold_disp.store.to_json())
+    warm_disp, warm_steady = run_profiled(warm_store)
+
+    cold_sum, warm_sum = cold_disp.summary(), warm_disp.summary()
+    first_warm = {name: [d for d in warm_disp.decisions if d.op == name][0].backend
+                  for name, _, _ in cases}
+    return {
+        "rounds": rounds,
+        "cold_explore_dispatches": cold_sum["explore_dispatches"],
+        "warm_explore_dispatches": warm_sum["explore_dispatches"],
+        "cold_steady_backend": cold_steady,
+        "warm_steady_backend": warm_steady,
+        "warm_first_choice": first_warm,
+        "warm_skips_exploration": (
+            warm_sum["explore_dispatches"] < cold_sum["explore_dispatches"]
+            and first_warm == cold_steady
+        ),
     }
 
 
@@ -164,7 +231,9 @@ def serving_workload(fast: bool) -> dict:
     }
 
 
-def run(fast: bool = False) -> dict:
+def run(
+    fast: bool = False, profile_in: str | None = None, profile_out: str | None = None
+) -> dict:
     print("-- workload A: kernel microbench suite --")
     a = kernel_workload(fast)
     print(f"{'case':<28}" + "".join(f"{b:>10}" for b in a["static_ms"]))
@@ -185,14 +254,29 @@ def run(fast: bool = False) -> dict:
         f"best static: {b['static_best']}; profiled beats/matches best: "
         f"{b['profiled_beats_or_matches_best']}"
     )
-    return {"kernel": a, "serving": b}
+
+    print("\n-- workload C: cross-run warm start (--profile-in) --")
+    c = warmstart_workload(fast, profile_in=profile_in, profile_out=profile_out)
+    print(
+        f"exploration dispatches: cold={c['cold_explore_dispatches']} "
+        f"warm={c['warm_explore_dispatches']} (over {c['rounds']} rounds)\n"
+        f"steady-state backends: cold={c['cold_steady_backend']}, warm first "
+        f"choice={c['warm_first_choice']}\n"
+        f"warm start skips exploration: {c['warm_skips_exploration']}"
+    )
+    return {"kernel": a, "serving": b, "warm_start": c}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--profile-in", default=None, metavar="PATH",
+                    help="warm-start workload C from a session/store JSON "
+                         "(default: round-trips the cold run's own store)")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="write workload C's cold-run ProfileStore JSON")
     args = ap.parse_args()
-    rec = run(fast=args.fast)
+    rec = run(fast=args.fast, profile_in=args.profile_in, profile_out=args.profile_out)
     out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out_dispatch.json")
     with open(out, "w") as f:
         json.dump(rec, f, indent=1)

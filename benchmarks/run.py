@@ -31,8 +31,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import breakdown_fig2, kernel_bench, overhead_table1, sdfg_bench
+    from repro.trace import artifact_meta
 
-    results = {}
+    # provenance stamp (schema/git/timestamp/chip) so `python -m repro.trace
+    # diff` can compare out_all.json artifacts across PRs
+    results = {"meta": artifact_meta({"fast": args.fast})}
     print("\n########## 1. Table I: instrumentation overhead ##########")
     results["table1"] = overhead_table1.run(fast=args.fast)
     print("\n########## 2. Fig 2: system-vs-user breakdown ##########")

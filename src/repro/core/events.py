@@ -6,44 +6,101 @@ framework is not an OS thread: it is the training step, the microbatch, the
 checkpoint writer and the serving request.  This module records their
 spawn/exit events on the host with monotonic timestamps, and is the sink for
 uprobe-style host callbacks (repro.core.uprobes).
+
+Two properties mirror the kernel-side perf machinery:
+
+* **Bounded storage** — an ``EventLog(maxlen=N)`` is a ring: once full, the
+  oldest events are overwritten and counted in :attr:`EventLog.dropped`,
+  exactly like a perf/eBPF ring buffer under backpressure.  The default is
+  unbounded for short-lived tools; long-running servers should bound it
+  (see :class:`repro.trace.collector.TraceCollector`).
+* **Span identity** — concurrent units interleave (request A's exit can land
+  between request B's spawn and exit), so spawn/exit pairing cannot be a
+  stack.  ``lifecycle()`` allocates a process-unique span id recorded on both
+  bracket events; :meth:`EventLog.durations` pairs by span id, then by
+  payload identity, and only falls back to stack order for legacy events.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import time
+from collections import deque
 from contextlib import contextmanager
-from typing import Any, Iterator
+from typing import Any, Iterator, Optional
+
+_SPAN_IDS = itertools.count(1)  # process-unique span ids (0 = "no span")
+
+
+def next_span_id() -> int:
+    return next(_SPAN_IDS)
 
 
 @dataclasses.dataclass(frozen=True)
 class Event:
     t: float  # monotonic seconds
-    kind: str  # spawn | exit | probe | mark
+    kind: str  # spawn | exit | probe | mark | dispatch | straggler
     name: str  # e.g. "step", "microbatch", "request", probe target
     payload: Any = None
+    span: int = 0  # pairs spawn/exit of one unit; 0 = unspanned (legacy)
+
+
+def _pair_key(e: Event) -> Optional[Any]:
+    """Pairing key for a spawn/exit event: span id, else hashable payload."""
+    if e.span:
+        return ("span", e.span)
+    try:
+        hash(e.payload)
+    except TypeError:
+        return None
+    if e.payload is None:
+        return None
+    return ("payload", e.payload)
 
 
 class EventLog:
-    """Thread-safe append-only event log (the eBPF ring-buffer analogue)."""
+    """Thread-safe append-only event log (the eBPF ring-buffer analogue).
 
-    def __init__(self) -> None:
-        self._events: list[Event] = []
+    ``maxlen`` turns it into a bounded ring: the newest ``maxlen`` events are
+    kept, evictions are counted in :attr:`dropped` (perf-buffer "lost
+    samples" accounting — the collector never blocks the instrumented path).
+    """
+
+    def __init__(self, maxlen: int | None = None) -> None:
+        self._events: deque[Event] = deque(maxlen=maxlen)
         self._lock = threading.Lock()
+        self._dropped = 0
 
-    def record(self, kind: str, name: str, payload: Any = None) -> None:
-        ev = Event(time.monotonic(), kind, name, payload)
+    @property
+    def maxlen(self) -> int | None:
+        return self._events.maxlen
+
+    @property
+    def dropped(self) -> int:
         with self._lock:
+            return self._dropped
+
+    def record(self, kind: str, name: str, payload: Any = None, *, span: int = 0) -> None:
+        ev = Event(time.monotonic(), kind, name, payload, span)
+        with self._lock:
+            if self._events.maxlen is not None and len(self._events) == self._events.maxlen:
+                self._dropped += 1
             self._events.append(ev)
 
     @contextmanager
-    def lifecycle(self, name: str, payload: Any = None) -> Iterator[None]:
-        """spawn/exit bracket for a step / microbatch / request."""
-        self.record("spawn", name, payload)
+    def lifecycle(self, name: str, payload: Any = None) -> Iterator[int]:
+        """spawn/exit bracket for a step / microbatch / request.
+
+        Yields the span id shared by both bracket events, so callers can
+        attach child events to the same span.
+        """
+        span = next_span_id()
+        self.record("spawn", name, payload, span=span)
         try:
-            yield
+            yield span
         finally:
-            self.record("exit", name, payload)
+            self.record("exit", name, payload, span=span)
 
     def events(self, kind: str | None = None, name: str | None = None) -> list[Event]:
         with self._lock:
@@ -57,9 +114,14 @@ class EventLog:
     def clear(self) -> None:
         with self._lock:
             self._events.clear()
+            self._dropped = 0
 
     def to_json(self) -> str:
-        """JSON-serialise the log (payloads fall back to repr when needed)."""
+        """JSON-serialise the log (payloads fall back to repr when needed).
+
+        Top level is ``{"dropped": N, "maxlen": M|null, "events": [...]}`` so
+        consumers can see ring-buffer losses alongside the surviving events.
+        """
         import json
 
         def default(obj: Any) -> str:
@@ -67,24 +129,44 @@ class EventLog:
 
         with self._lock:
             rows = [dataclasses.asdict(e) for e in self._events]
-        return json.dumps(rows, default=default)
+            dropped, maxlen = self._dropped, self._events.maxlen
+        return json.dumps(
+            {"dropped": dropped, "maxlen": maxlen, "events": rows}, default=default
+        )
 
     def __len__(self) -> int:
         with self._lock:
             return len(self._events)
 
     def durations(self, name: str) -> list[float]:
-        """Pair spawn/exit events (stack-matched) into durations."""
+        """Pair spawn/exit events of ``name`` into durations (exit order).
+
+        Pairing is by span id when present, then by (hashable, non-None)
+        payload identity — so interleaved units (request A exits between
+        request B's spawn and exit) pair correctly.  Events carrying neither
+        fall back to the legacy LIFO stack match.
+        """
         out: list[float] = []
+        open_by_key: dict[Any, list[float]] = {}
         stack: list[float] = []
         for e in self.events(name=name):
+            key = _pair_key(e)
             if e.kind == "spawn":
-                stack.append(e.t)
-            elif e.kind == "exit" and stack:
-                out.append(e.t - stack.pop())
+                if key is not None:
+                    open_by_key.setdefault(key, []).append(e.t)
+                else:
+                    stack.append(e.t)
+            elif e.kind == "exit":
+                opened = open_by_key.get(key) if key is not None else None
+                if opened:
+                    out.append(e.t - opened.pop())
+                elif key is None and stack:
+                    out.append(e.t - stack.pop())
         return out
 
 
 # Global default log (like the kernel's shared perf buffer); components may
-# construct private logs for isolation.
-GLOBAL_LOG = EventLog()
+# construct private logs for isolation.  Bounded: a long-lived server must
+# not grow host memory without limit — see GLOBAL_LOG_MAXLEN.
+GLOBAL_LOG_MAXLEN = 1 << 18  # 262144 events ≈ tens of MB worst case
+GLOBAL_LOG = EventLog(maxlen=GLOBAL_LOG_MAXLEN)

@@ -53,9 +53,13 @@ class DispatchDecision:
     est_s: float
     source: str  # static | roofline | measured | explore
     policy: str
+    measured_s: Optional[float] = None  # wall-time of the executed call
 
     def payload(self) -> dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if d["measured_s"] is None:  # unexecuted decision (partition/choose)
+            del d["measured_s"]
+        return d
 
 
 class Dispatcher:
@@ -71,7 +75,14 @@ class Dispatcher:
     ) -> None:
         self.cfg = cfg or DispatchConfig()
         self.registry = registry if registry is not None else host_registry()
-        self.store = store or ProfileStore(min_samples=self.cfg.min_samples)
+        # `is not None`, not truthiness: an empty provided store (len 0) must
+        # still be used — it may be shared with a session writer or filled by
+        # a later merge
+        self.store = store if store is not None else ProfileStore(min_samples=self.cfg.min_samples)
+        # warmth is a dispatch-policy knob, not a property of the loaded file:
+        # a --profile-in store restored with a different min_samples would
+        # silently override cfg.min_samples otherwise
+        self.store.min_samples = self.cfg.min_samples
         self.log = GLOBAL_LOG if log is None else log
         self.decisions: list[DispatchDecision] = []
 
@@ -154,16 +165,17 @@ class Dispatcher:
                 if b in self.registry
             }
         decision = self.choose(op, sig, {b: estimates[b] for b in variants if b in estimates})
+        idx = len(self.decisions) - 1  # choose() appended; backfill measurement
         fn = variants[decision.backend]
         t0 = time.perf_counter()
         out = fn(*args, **kwargs)
         jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         self.store.record(op, decision.backend, sig, dt)
+        decision = dataclasses.replace(decision, measured_s=dt)
+        self.decisions[idx] = decision
         if self.cfg.record_events:
-            payload = decision.payload()
-            payload["measured_s"] = dt
-            self.log.record("dispatch", op, payload)
+            self.log.record("dispatch", op, decision.payload())
         return out
 
     # -- whole-graph placement -------------------------------------------------
@@ -195,15 +207,24 @@ class Dispatcher:
     # -- reporting -------------------------------------------------------------
 
     def summary(self) -> dict[str, Any]:
-        """Decision counts per (op, backend) — for driver JSON output."""
+        """Decision counts per (op, backend) — for driver JSON output.
+
+        ``by_source`` separates exploration dispatches (``explore``) from
+        steady-state ones (``measured``/``roofline``/``static``): a
+        warm-started dispatcher (``--profile-in``) shows explore≈0.
+        """
         by_op: dict[str, dict[str, int]] = {}
+        by_source: dict[str, int] = {}
         for d in self.decisions:
             by_op.setdefault(d.op, {}).setdefault(d.backend, 0)
             by_op[d.op][d.backend] += 1
+            by_source[d.source] = by_source.get(d.source, 0) + 1
         return {
             "policy": self.cfg.policy,
             "decisions": len(self.decisions),
             "by_op": by_op,
+            "by_source": by_source,
+            "explore_dispatches": by_source.get("explore", 0),
             "profiled_keys": len(self.store),
         }
 

@@ -94,7 +94,7 @@ class ProfileStore:
         n = 0
         for ev in log.events(kind="dispatch"):
             p = ev.payload
-            if not isinstance(p, dict) or "measured_s" not in p:
+            if not isinstance(p, dict) or not isinstance(p.get("measured_s"), (int, float)):
                 continue
             self.record(p["op"], p["backend"], p.get("sig", "<scalar>"), p["measured_s"])
             n += 1
@@ -131,6 +131,28 @@ class ProfileStore:
         if measured is not None:
             return measured, "measured"
         return estimate_s, "roofline"
+
+    def merge(self, other: "ProfileStore") -> int:
+        """Fold another store's samples in (warm-start across runs).
+
+        Welford states combine exactly (Chan et al. parallel variance), so
+        merging N per-run stores equals one store that saw every sample.
+        Returns the number of keys touched.
+        """
+        for k, o in other._entries.items():
+            e = self._entries.get(k)
+            if e is None:
+                self._entries[k] = ProfileEntry(o.count, o.mean_s, o.m2, o.min_s)
+                continue
+            n = e.count + o.count
+            if n == 0:
+                continue
+            delta = o.mean_s - e.mean_s
+            e.m2 = e.m2 + o.m2 + delta * delta * e.count * o.count / n
+            e.mean_s = e.mean_s + delta * o.count / n
+            e.count = n
+            e.min_s = min(e.min_s, o.min_s)
+        return len(other._entries)
 
     # -- persistence ---------------------------------------------------------
 

@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \\
       --requests 12 --max-new 16
+
+Observability (repro.trace): --trace-out t.json snapshots the whole run —
+events, dispatch decisions, measured profiles, chip + git metadata — for
+`python -m repro.trace {report,export,diff}`; --profile-in warm-starts the
+profiled dispatcher from a previous session (skips exploration);
+--profile-out writes the bare ProfileStore for the next run.
 """
 from __future__ import annotations
 
@@ -13,10 +19,10 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduced
-from repro.core.events import EventLog
 from repro.dispatch import DispatchConfig, Dispatcher
 from repro.models import lm
 from repro.serving.engine import Engine, ServeConfig
+from repro.trace import Session, TraceCollector, load_profile_stores
 
 
 def main() -> None:
@@ -36,6 +42,15 @@ def main() -> None:
     )
     ap.add_argument("--dispatch-backend", default="chunked",
                     help="backend pinned by --dispatch static")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a repro.trace session snapshot of this run")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="trace ring-buffer capacity (events); evictions are counted")
+    ap.add_argument("--profile-in", action="append", default=None, metavar="PATH",
+                    help="warm-start dispatch profiles from a session/store JSON "
+                         "(repeatable; multiple files are merged)")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="write the measured ProfileStore for the next run")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -43,12 +58,14 @@ def main() -> None:
         cfg = reduced(cfg)
     key = jax.random.PRNGKey(args.seed)
     params = lm.init_params(cfg, key)
-    log = EventLog()
+    log = TraceCollector(capacity=args.trace_capacity)
     dispatcher = None
     if args.dispatch != "off":
+        store = load_profile_stores(args.profile_in) if args.profile_in else None
         dispatcher = Dispatcher(
             DispatchConfig(policy=args.dispatch, static_backend=args.dispatch_backend),
             log=log,
+            store=store,
         )
     eng = Engine(
         cfg,
@@ -83,6 +100,19 @@ def main() -> None:
     if dispatcher is not None:
         rec["dispatch"] = dispatcher.summary()
         rec["dispatch_events"] = len(log.events(kind="dispatch"))
+        if args.profile_in:
+            rec["profile_in"] = args.profile_in
+    rec["trace"] = log.stats()
+    if args.trace_out:
+        sess = Session.capture(
+            log, dispatcher=dispatcher,
+            meta={"driver": "serve", "arch": cfg.name, "requests": args.requests},
+        )
+        rec["trace_out"] = sess.save(args.trace_out)
+    if args.profile_out and dispatcher is not None:
+        with open(args.profile_out, "w") as f:
+            f.write(dispatcher.store.to_json())
+        rec["profile_out"] = args.profile_out
     print(json.dumps(rec))
 
 

@@ -23,11 +23,11 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs import get_config, reduced
-from repro.core.events import EventLog
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.dispatch import DispatchConfig, Dispatcher, with_impl
 from repro.distributed import sharding as shd
 from repro.runtime.supervisor import FailureInjector, Supervisor, SupervisorConfig
+from repro.trace import Session, TraceCollector, load_profile_stores
 from repro.training.step import (
     TrainConfig,
     abstract_train_state,
@@ -70,6 +70,15 @@ def main() -> None:
     )
     ap.add_argument("--dispatch-backend", default="chunked",
                     help="backend pinned by --dispatch static")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a repro.trace session snapshot of this run")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="trace ring-buffer capacity (events); evictions are counted")
+    ap.add_argument("--profile-in", action="append", default=None, metavar="PATH",
+                    help="warm-start dispatch profiles from a session/store JSON "
+                         "(repeatable; multiple files are merged)")
+    ap.add_argument("--profile-out", default=None, metavar="PATH",
+                    help="write the measured ProfileStore for the next run")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -104,8 +113,10 @@ def main() -> None:
         dispatcher = None
         step_variants = None
         if args.dispatch != "off":
+            store = load_profile_stores(args.profile_in) if args.profile_in else None
             dispatcher = Dispatcher(
-                DispatchConfig(policy=args.dispatch, static_backend=args.dispatch_backend)
+                DispatchConfig(policy=args.dispatch, static_backend=args.dispatch_backend),
+                store=store,
             )
             step_variants = {
                 t.name: jax.jit(
@@ -125,7 +136,7 @@ def main() -> None:
             b = data.batch(i)
             return {k: jnp.asarray(v) for k, v in b.items()}
 
-        log = EventLog()
+        log = TraceCollector(capacity=args.trace_capacity)
         if dispatcher is not None:
             dispatcher.log = log
         fail_at = tuple(int(s) for s in args.fail_at.split(",") if s)
@@ -164,6 +175,20 @@ def main() -> None:
     if dispatcher is not None:
         rec["dispatch"] = dispatcher.summary()
         rec["dispatch_events"] = len(log.events(kind="dispatch"))
+        if args.profile_in:
+            rec["profile_in"] = args.profile_in
+    rec["trace"] = log.stats()
+    if args.trace_out:
+        sess = Session.capture(
+            log, dispatcher=dispatcher,
+            meta={"driver": "train", "arch": cfg.name, "mesh": args.mesh,
+                  "steps": args.steps},
+        )
+        rec["trace_out"] = sess.save(args.trace_out)
+    if args.profile_out and dispatcher is not None:
+        with open(args.profile_out, "w") as f:
+            f.write(dispatcher.store.to_json())
+        rec["profile_out"] = args.profile_out
     print(json.dumps(rec))
 
 

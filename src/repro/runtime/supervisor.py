@@ -171,4 +171,12 @@ class Supervisor:
             "restarts": self.restarts,
             "stragglers": self.stragglers,
             "metrics": metrics_hist,
+            # collector health: a bounded log on a long run drops oldest
+            # events; surfacing the counter here keeps the loss visible in
+            # every driver's JSON output (perf "lost samples" discipline).
+            "trace": {
+                "events": len(self.log),
+                "dropped": self.log.dropped,
+                "capacity": self.log.maxlen,
+            },
         }

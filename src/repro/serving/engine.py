@@ -175,13 +175,14 @@ class Engine:
         tokens = np.zeros(B, np.int32)
         for r in live:
             tokens[r.slot] = r.out[-1]
-        logits, self.caches = self._decode(
-            self.params,
-            jnp.asarray(tokens),
-            jnp.asarray(self.cur_pos),
-            self.caches,
-        )
-        nxt = np.asarray(self._sample(logits))
+        with self.log.lifecycle("decode_tick", len(live)):
+            logits, self.caches = self._decode(
+                self.params,
+                jnp.asarray(tokens),
+                jnp.asarray(self.cur_pos),
+                self.caches,
+            )
+            nxt = np.asarray(self._sample(logits))
         finished: list[Request] = []
         for r in live:
             self.cur_pos[r.slot] += 1

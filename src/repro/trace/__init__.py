@@ -1,0 +1,39 @@
+"""repro.trace — continuous trace collection, export, cross-run persistence.
+
+The observability layer over :mod:`repro.core.events`:
+
+* :mod:`repro.trace.collector` — bounded ring-buffer :class:`TraceCollector`
+  (capacity + dropped-event accounting, per-track views, span resolution);
+* :mod:`repro.trace.export` — Chrome Trace Event JSON (Perfetto), speedscope,
+  folded flamegraph stacks;
+* :mod:`repro.trace.session` — one-file run snapshots (events + dispatch
+  decisions + ProfileStore + chip + git/config metadata) with warm-start
+  reload;
+* :mod:`repro.trace.cli` — ``python -m repro.trace {report,export,diff}``.
+"""
+from repro.trace.collector import Span, TraceCollector, resolve_spans
+from repro.trace.export import export, to_chrome_trace, to_folded, to_speedscope
+from repro.trace.session import (
+    Session,
+    artifact_meta,
+    diff_artifacts,
+    diff_sessions,
+    load_profile_store,
+    load_profile_stores,
+)
+
+__all__ = [
+    "Span",
+    "TraceCollector",
+    "resolve_spans",
+    "export",
+    "to_chrome_trace",
+    "to_folded",
+    "to_speedscope",
+    "Session",
+    "artifact_meta",
+    "diff_artifacts",
+    "diff_sessions",
+    "load_profile_store",
+    "load_profile_stores",
+]

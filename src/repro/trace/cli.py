@@ -1,0 +1,140 @@
+"""Analysis CLI for trace sessions.
+
+  PYTHONPATH=src python -m repro.trace report  t.json
+  PYTHONPATH=src python -m repro.trace export  t.json --format chrome -o t.chrome.json
+  PYTHONPATH=src python -m repro.trace diff    a.json b.json
+
+``report`` prints per-op / per-backend latency tables for one session;
+``export`` renders it for a standard viewer (Perfetto / speedscope /
+flamegraph.pl); ``diff`` compares two sessions — or two stamped benchmark
+artifacts (``benchmarks/out_all.json``) — across runs / PRs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any
+
+from repro.trace.export import FORMATS
+from repro.trace.export import export as render
+from repro.trace.session import Session, diff_artifacts, diff_sessions, is_session
+
+
+def _fmt_ms(v: Any) -> str:
+    return f"{v:10.3f}" if isinstance(v, (int, float)) else f"{'-':>10}"
+
+
+def _print_report(rep: dict[str, Any]) -> None:
+    m = rep["meta"]
+    print(f"session  schema={m.get('schema')}  git={m.get('git_sha')}  "
+          f"created={m.get('created_unix')}")
+    print(f"events   {rep['events']}  (dropped by ring: {rep['dropped']})")
+    if rep["latency"]:
+        print(f"\n{'track/name':<28}{'count':>7}{'mean_ms':>10}{'min_ms':>10}{'max_ms':>10}")
+        for key, row in sorted(rep["latency"].items()):
+            print(f"{key:<28}{row['count']:>7}"
+                  + _fmt_ms(row["mean_ms"]) + _fmt_ms(row["min_ms"]) + _fmt_ms(row["max_ms"]))
+    d = rep["dispatch"]
+    if d["decisions"]:
+        print(f"\ndispatch: {d['decisions']} decisions, {d['profiled_keys']} profiled keys, "
+              f"sources={d['by_source']}")
+        print(f"{'op':<22}{'backend':<10}{'count':>7}{'mean_ms':>10}")
+        for op, backends in sorted(d["by_op"].items()):
+            for b, cell in sorted(backends.items()):
+                print(f"{op:<22}{b:<10}{cell['count']:>7}" + _fmt_ms(cell.get("mean_ms")))
+
+
+def cmd_report(args: argparse.Namespace) -> int:
+    rep = Session.load(args.session).report()
+    if args.json:
+        print(json.dumps(rep, indent=1))
+    else:
+        _print_report(rep)
+    return 0
+
+
+def cmd_export(args: argparse.Namespace) -> int:
+    sess = Session.load(args.session)
+    text = render(sess.events, args.format)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"wrote {args.out} ({args.format}, {len(sess.events)} events)")
+    else:
+        sys.stdout.write(text)
+    return 0
+
+
+def cmd_diff(args: argparse.Namespace) -> int:
+    with open(args.a) as f:
+        raw_a = json.load(f)
+    with open(args.b) as f:
+        raw_b = json.load(f)
+    if is_session(raw_a) != is_session(raw_b):
+        which = args.a if is_session(raw_a) else args.b
+        other = args.b if is_session(raw_a) else args.a
+        ap_err = (f"cannot diff a trace session ({which}) against a non-session "
+                  f"JSON ({other}); pass two sessions or two bench artifacts")
+        print(ap_err, file=sys.stderr)
+        return 2
+    if is_session(raw_a) and is_session(raw_b):
+        out = diff_sessions(Session.from_dict(raw_a), Session.from_dict(raw_b))
+        if args.json:
+            print(json.dumps(out, indent=1))
+            return 0
+        print(f"a: git={out['a'].get('git_sha')}  b: git={out['b'].get('git_sha')}")
+        if out["latency"]:
+            print(f"\n{'track/name':<28}{'a_mean_ms':>10}{'b_mean_ms':>10}{'delta_%':>9}")
+            for key, row in sorted(out["latency"].items()):
+                if "only_in" in row:
+                    print(f"{key:<28}  (only in {row['only_in']})")
+                else:
+                    d = row["delta_pct"]
+                    print(f"{key:<28}" + _fmt_ms(row["a_mean_ms"]) + _fmt_ms(row["b_mean_ms"])
+                          + (f"{d:>+9.1f}" if d is not None else f"{'-':>9}"))
+        changed = {op: r for op, r in out["dispatch_choices"].items() if r["changed"]}
+        if out["dispatch_choices"]:
+            print(f"\ndispatch choices changed: {len(changed)}/{len(out['dispatch_choices'])}")
+            for op, r in sorted(changed.items()):
+                print(f"  {op}: {r['a']} -> {r['b']}")
+            print(f"exploration (source counts): a={out['by_source']['a']}  "
+                  f"b={out['by_source']['b']}")
+    else:
+        out = diff_artifacts(raw_a, raw_b)
+        if args.json:
+            print(json.dumps(out, indent=1))
+            return 0
+        print(f"a: git={out['a_meta']}  b: git={out['b_meta']}  "
+              f"changed leaves: {out['total_changed']}")
+        print(f"{'key':<52}{'a':>12}{'b':>12}{'delta_%':>9}")
+        for row in out["changed"]:
+            d = row["delta_pct"]
+            print(f"{row['key']:<52}{row['a']:>12.4g}{row['b']:>12.4g}"
+                  + (f"{d:>+9.1f}" if d is not None else f"{'new':>9}"))
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.trace", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("report", help="per-op / per-backend latency tables for one session")
+    p.add_argument("session")
+    p.add_argument("--json", action="store_true", help="machine-readable output")
+    p.set_defaults(fn=cmd_report)
+
+    p = sub.add_parser("export", help="render a session for a standard trace viewer")
+    p.add_argument("session")
+    p.add_argument("--format", choices=sorted(FORMATS), default="chrome")
+    p.add_argument("-o", "--out", default=None, help="output path (default: stdout)")
+    p.set_defaults(fn=cmd_export)
+
+    p = sub.add_parser("diff", help="compare two sessions (or two bench artifacts)")
+    p.add_argument("a")
+    p.add_argument("b")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_diff)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)

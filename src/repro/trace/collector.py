@@ -1,0 +1,149 @@
+"""Bounded trace collector: the perf-buffer front end of ``repro.trace``.
+
+A :class:`TraceCollector` IS an :class:`~repro.core.events.EventLog` (it
+subclasses it), so every component that takes ``log=`` — the serving engine,
+the train supervisor, the dispatcher, uprobes, tracepoint callbacks — can
+write into a bounded collector unchanged.  On top of the raw log it adds:
+
+* **capacity + drop accounting** — bounded by default (``capacity`` events);
+  ``stats()`` reports how many events the ring evicted, mirroring the
+  perf-buffer "lost samples" counter the paper's pipeline watches;
+* **tracks** — the per-unit views (step / microbatch / request / checkpoint /
+  dispatch) a trace viewer renders as rows; event names map onto tracks via
+  ``TRACK_OF`` (extensible per collector);
+* **closed spans** — spawn/exit pairs resolved into ``Span`` records (by span
+  id / payload identity, interleaving-safe), the unit every exporter in
+  :mod:`repro.trace.export` consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, Mapping, Optional
+
+from repro.core.events import Event, EventLog, _pair_key
+
+DEFAULT_CAPACITY = 1 << 16  # 65536 events
+
+# Canonical track per event name.  Anything unlisted lands on "other" unless
+# the collector was constructed with extra mappings.
+TRACK_OF: dict[str, str] = {
+    "step": "step",
+    "train_step": "step",
+    "microbatch": "microbatch",
+    "request": "request",
+    "prefill": "request",
+    "decode_tick": "request",
+    "checkpoint": "checkpoint",
+    "restart": "checkpoint",
+    "elastic_resize": "checkpoint",
+}
+
+TRACKS = ("step", "microbatch", "request", "checkpoint", "dispatch", "other")
+
+
+@dataclasses.dataclass(frozen=True)
+class Span:
+    """A closed spawn/exit pair (or a zero-length instant for loose events)."""
+
+    name: str
+    track: str
+    t0: float
+    t1: float
+    payload: Any = None
+    span: int = 0
+
+    @property
+    def dur(self) -> float:
+        return self.t1 - self.t0
+
+
+class TraceCollector(EventLog):
+    """Bounded EventLog with track views and span resolution."""
+
+    def __init__(
+        self,
+        capacity: int | None = DEFAULT_CAPACITY,
+        *,
+        track_of: Optional[Mapping[str, str]] = None,
+    ) -> None:
+        super().__init__(maxlen=capacity)
+        self._track_of = dict(TRACK_OF)
+        if track_of:
+            self._track_of.update(track_of)
+
+    # -- track views ---------------------------------------------------------
+
+    def track_name(self, event: Event) -> str:
+        """The viewer row an event belongs to (dispatch is kind-keyed)."""
+        if event.kind == "dispatch":
+            return "dispatch"
+        return self._track_of.get(event.name, "other")
+
+    def track(self, track: str) -> list[Event]:
+        return [e for e in self.events() if self.track_name(e) == track]
+
+    def tracks(self) -> dict[str, list[Event]]:
+        out: dict[str, list[Event]] = {t: [] for t in TRACKS}
+        for e in self.events():
+            out.setdefault(self.track_name(e), []).append(e)
+        return {t: evs for t, evs in out.items() if evs}
+
+    # -- span resolution -----------------------------------------------------
+
+    def spans(self) -> list[Span]:
+        return resolve_spans(self.events(), self.track_name)
+
+    # -- accounting ----------------------------------------------------------
+
+    def stats(self) -> dict[str, Any]:
+        per_track = {t: len(evs) for t, evs in self.tracks().items()}
+        return {
+            "events": len(self),
+            "capacity": self.maxlen,
+            "dropped": self.dropped,
+            "per_track": per_track,
+        }
+
+
+def resolve_spans(events: Iterable[Event], track_name=None) -> list[Span]:
+    """Pair spawn/exit events into closed :class:`Span` records.
+
+    Same pairing discipline as :meth:`EventLog.durations` — span id, then
+    hashable payload, then LIFO fallback — applied across all names at once.
+    Unpaired spawns are dropped (still open when the trace was cut); events
+    of other kinds (mark/probe/straggler) become zero-length instants, and
+    ``dispatch`` events with a ``measured_s`` payload become spans covering
+    their measured execution window.
+    """
+    if track_name is None:
+        track_name = lambda e: "dispatch" if e.kind == "dispatch" else TRACK_OF.get(e.name, "other")  # noqa: E731
+    out: list[Span] = []
+    open_by_key: dict[Any, list[Event]] = {}
+    stack_by_name: dict[str, list[Event]] = {}
+    for e in events:
+        if e.kind == "spawn":
+            key = _pair_key(e)
+            if key is not None:
+                open_by_key.setdefault((e.name, key), []).append(e)
+            else:
+                stack_by_name.setdefault(e.name, []).append(e)
+        elif e.kind == "exit":
+            key = _pair_key(e)
+            opened = open_by_key.get((e.name, key)) if key is not None else None
+            if opened:
+                s = opened.pop()
+            elif key is None and stack_by_name.get(e.name):
+                s = stack_by_name[e.name].pop()
+            else:
+                continue  # exit without a visible spawn (evicted from ring)
+            out.append(Span(e.name, track_name(s), s.t, e.t, s.payload, s.span))
+        else:
+            p = e.payload
+            if e.kind == "dispatch" and isinstance(p, dict) and isinstance(
+                p.get("measured_s"), (int, float)
+            ):
+                out.append(Span(e.name, track_name(e), e.t - p["measured_s"], e.t, p, e.span))
+            else:
+                out.append(Span(e.name, track_name(e), e.t, e.t, p, e.span))
+    out.sort(key=lambda s: s.t0)
+    return out

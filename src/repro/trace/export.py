@@ -1,0 +1,197 @@
+"""Trace exporters: Chrome Trace Event JSON, speedscope, folded stacks.
+
+Everything a standard viewer can open:
+
+* :func:`to_chrome_trace` — the Trace Event Format (``traceEvents``) that
+  Perfetto / ``chrome://tracing`` load directly.  Spawn/exit pairs become
+  ``B``/``E`` duration events, dispatch decisions become ``X`` complete
+  events spanning their measured execution, loose marks/probes become ``i``
+  instants.  Tracks map to ``tid`` rows under one ``pid``.
+* :func:`to_speedscope` — a sampled speedscope profile per track (each
+  closed span is one weighted sample), https://speedscope.app loads it.
+* :func:`to_folded` — ``track;name count`` folded stacks for classic
+  ``flamegraph.pl`` / inferno tooling (counts in integer microseconds).
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Iterable, Optional
+
+from repro.core.events import Event
+from repro.trace.collector import TRACKS, Span, TraceCollector, resolve_spans
+
+PID = 1  # single-process traces; tracks are threads
+
+
+def _track_ids(tracks: Iterable[str]) -> dict[str, int]:
+    order = {t: i for i, t in enumerate(TRACKS)}
+    # canonical tracks keep stable tids; custom tracks get distinct tids after
+    # them (alphabetical), one viewer row each
+    uniq = sorted(set(tracks), key=lambda t: (order.get(t, len(order)), t))
+    return {t: i + 1 for i, t in enumerate(uniq)}
+
+
+def _payload_args(payload: Any) -> dict[str, Any]:
+    if isinstance(payload, dict):
+        return {k: v if isinstance(v, (int, float, str, bool, type(None))) else repr(v)
+                for k, v in payload.items()}
+    if payload is None:
+        return {}
+    return {"payload": payload if isinstance(payload, (int, float, str, bool)) else repr(payload)}
+
+
+def _tracker(collector: Optional[TraceCollector]):
+    if collector is not None:
+        return collector.track_name
+    from repro.trace.collector import TRACK_OF
+
+    return lambda e: "dispatch" if e.kind == "dispatch" else TRACK_OF.get(e.name, "other")
+
+
+def to_chrome_trace(
+    events: Iterable[Event],
+    *,
+    collector: Optional[TraceCollector] = None,
+    meta: Optional[dict[str, Any]] = None,
+) -> dict[str, Any]:
+    """Trace Event Format dict: ``{"traceEvents": [...], "otherData": ...}``.
+
+    Timestamps are microseconds relative to the first event (Perfetto is
+    happiest with small positive ``ts``).
+    """
+    events = sorted(events, key=lambda e: e.t)
+    track_name = _tracker(collector)
+    tids = _track_ids(track_name(e) for e in events)
+
+    def start_of(e: Event) -> float:
+        # dispatch events are recorded at completion; their X row starts
+        # measured_s earlier, and the epoch must cover that
+        if e.kind == "dispatch" and isinstance(e.payload, dict) and isinstance(
+            e.payload.get("measured_s"), (int, float)
+        ):
+            return e.t - e.payload["measured_s"]
+        return e.t
+
+    def async_id(e: Event) -> Optional[str]:
+        """Pairing id for spawn/exit: concurrent units must not be matched by
+        the viewer's per-tid LIFO stack (interleaved requests would swap)."""
+        if e.span:
+            return str(e.span)
+        try:
+            hash(e.payload)
+        except TypeError:
+            return None
+        if e.payload is None:
+            return None
+        return f"{e.name}:{e.payload!r}"
+
+    t0 = min((start_of(e) for e in events), default=0.0)
+    us = lambda t: round((t - t0) * 1e6, 3)  # noqa: E731
+
+    rows: list[dict[str, Any]] = [
+        {"ph": "M", "pid": PID, "name": "process_name", "args": {"name": "repro"}}
+    ]
+    for track, tid in tids.items():
+        rows.append({"ph": "M", "pid": PID, "tid": tid, "name": "thread_name",
+                     "args": {"name": track}})
+    for e in events:
+        tid = tids[track_name(e)]
+        base = {"name": e.name, "pid": PID, "tid": tid, "ts": us(e.t),
+                "args": _payload_args(e.payload)}
+        if e.span:
+            base["args"]["span"] = e.span
+        if e.kind in ("spawn", "exit"):
+            # async b/e (paired by id) when the event carries an identity;
+            # sync B/E (viewer LIFO) only for legacy identity-less events
+            aid = async_id(e)
+            ph = {"spawn": ("b" if aid else "B"), "exit": ("e" if aid else "E")}[e.kind]
+            row = {**base, "ph": ph, "cat": "lifecycle"}
+            if aid:
+                row["id"] = aid
+            rows.append(row)
+        elif e.kind == "dispatch" and isinstance(e.payload, dict) and isinstance(
+            e.payload.get("measured_s"), (int, float)
+        ):
+            dur = round(e.payload["measured_s"] * 1e6, 3)
+            rows.append({**base, "ph": "X", "cat": "dispatch",
+                         "ts": us(start_of(e)), "dur": dur})
+        else:
+            rows.append({**base, "ph": "i", "cat": e.kind, "s": "t"})
+    out: dict[str, Any] = {"traceEvents": rows, "displayTimeUnit": "ms"}
+    if meta:
+        out["otherData"] = _payload_args(meta)
+    return out
+
+
+def to_speedscope(
+    events: Iterable[Event],
+    *,
+    collector: Optional[TraceCollector] = None,
+    name: str = "repro.trace",
+) -> dict[str, Any]:
+    """Speedscope file: one sampled profile per track, spans as samples."""
+    spans = resolve_spans(sorted(events, key=lambda e: e.t), _tracker(collector))
+    frames: list[dict[str, str]] = []
+    frame_idx: dict[str, int] = {}
+
+    def frame(n: str) -> int:
+        if n not in frame_idx:
+            frame_idx[n] = len(frames)
+            frames.append({"name": n})
+        return frame_idx[n]
+
+    by_track: dict[str, list[Span]] = {}
+    for s in spans:
+        if s.dur > 0:
+            by_track.setdefault(s.track, []).append(s)
+    profiles = []
+    for track, ss in sorted(by_track.items()):
+        profiles.append({
+            "type": "sampled",
+            "name": track,
+            "unit": "seconds",
+            "startValue": 0.0,
+            "endValue": sum(s.dur for s in ss),
+            "samples": [[frame(s.name)] for s in ss],
+            "weights": [s.dur for s in ss],
+        })
+    return {
+        "$schema": "https://www.speedscope.app/file-format-schema.json",
+        "name": name,
+        "shared": {"frames": frames},
+        "profiles": profiles,
+        "activeProfileIndex": 0,
+        "exporter": "repro.trace",
+    }
+
+
+def to_folded(
+    events: Iterable[Event], *, collector: Optional[TraceCollector] = None
+) -> str:
+    """Folded flamegraph stacks: ``track;name <microseconds>`` per line."""
+    spans = resolve_spans(sorted(events, key=lambda e: e.t), _tracker(collector))
+    agg: dict[str, int] = {}
+    for s in spans:
+        if s.dur <= 0:
+            continue
+        stack = f"{s.track};{s.name}"
+        if isinstance(s.payload, dict) and "backend" in s.payload:
+            stack += f";{s.payload['backend']}"
+        agg[stack] = agg.get(stack, 0) + int(round(s.dur * 1e6))
+    return "\n".join(f"{k} {v}" for k, v in sorted(agg.items())) + ("\n" if agg else "")
+
+
+FORMATS = {
+    "chrome": lambda evs, **kw: json.dumps(to_chrome_trace(evs, **kw), indent=1),
+    "speedscope": lambda evs, **kw: json.dumps(to_speedscope(evs, **kw), indent=1),
+    "folded": lambda evs, **kw: to_folded(evs, **kw),
+}
+
+
+def export(events: Iterable[Event], fmt: str, **kw: Any) -> str:
+    """Render ``events`` in ``fmt`` (one of {chrome, speedscope, folded})."""
+    try:
+        render = FORMATS[fmt]
+    except KeyError:
+        raise ValueError(f"unknown format {fmt!r}; choose from {sorted(FORMATS)}") from None
+    return render(events, **kw)

@@ -1,0 +1,319 @@
+"""Run snapshots: one JSON file per run, reloadable across processes.
+
+A *session* is everything a later analysis (or a warm-started dispatcher)
+needs from a run: the event trace, every dispatch decision, the measured
+:class:`~repro.dispatch.profiles.ProfileStore`, the chip model it was priced
+against, and provenance metadata (schema version, git SHA, wall-clock
+timestamp, argv).  ``launch.serve --trace-out t.json`` writes one;
+``python -m repro.trace {report,export,diff}`` consumes them; ``--profile-in``
+feeds the stored profiles back into a new dispatcher so it skips the
+exploration phase entirely (the measured warm-start crossover).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import time
+from typing import Any, Optional
+
+from repro.core.events import Event, EventLog
+from repro.dispatch.profiles import ProfileStore
+from repro.trace.collector import Span, resolve_spans
+
+SESSION_SCHEMA = "repro.trace.session/v1"
+ARTIFACT_SCHEMA = "repro.bench/v1"
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def run_metadata(extra: Optional[dict[str, Any]] = None) -> dict[str, Any]:
+    """Provenance stamp shared by sessions and bench artifacts."""
+    meta = {
+        "git_sha": git_sha(),
+        "created_unix": time.time(),
+        "argv": list(sys.argv),
+        "python": sys.version.split()[0],
+    }
+    if extra:
+        meta.update(extra)
+    return meta
+
+
+def artifact_meta(extra: Optional[dict[str, Any]] = None) -> dict[str, Any]:
+    """Stamp for benchmark output JSON (``repro.trace diff``-comparable)."""
+    from repro.hw.specs import default_chip
+
+    meta = {"schema": ARTIFACT_SCHEMA, **run_metadata(extra)}
+    meta["chip"] = dataclasses.asdict(default_chip())
+    return meta
+
+
+def _sanitize(obj: Any) -> Any:
+    """Round-trip ``obj`` through JSON semantics (repr for the unencodable)."""
+    return json.loads(json.dumps(obj, default=repr))
+
+
+@dataclasses.dataclass
+class Session:
+    """An in-memory run snapshot (see module docstring for the file story)."""
+
+    meta: dict[str, Any]
+    events: list[Event]
+    dropped: int = 0
+    capacity: Optional[int] = None
+    decisions: list[dict[str, Any]] = dataclasses.field(default_factory=list)
+    store: Optional[ProfileStore] = None
+    chip: Optional[dict[str, Any]] = None
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def capture(
+        cls,
+        log: EventLog,
+        *,
+        dispatcher: Any = None,
+        store: Optional[ProfileStore] = None,
+        meta: Optional[dict[str, Any]] = None,
+    ) -> "Session":
+        """Snapshot a live run.
+
+        ``dispatcher`` (a :class:`repro.dispatch.dispatcher.Dispatcher`)
+        contributes its decisions, profile store and chip model; any of the
+        three can also be absent (trace-only runs).
+        """
+        decisions: list[dict[str, Any]] = []
+        chip = None
+        if dispatcher is not None:
+            decisions = [d.payload() for d in dispatcher.decisions]
+            store = store if store is not None else dispatcher.store
+            chip = dataclasses.asdict(dispatcher.chip)
+        return cls(
+            meta={"schema": SESSION_SCHEMA, **run_metadata(meta)},
+            events=log.events(),
+            dropped=log.dropped,
+            capacity=log.maxlen,
+            decisions=decisions,
+            store=store,
+            chip=chip,
+        )
+
+    # -- persistence ---------------------------------------------------------
+
+    def to_dict(self) -> dict[str, Any]:
+        return _sanitize({
+            "meta": self.meta,
+            "trace": {
+                "dropped": self.dropped,
+                "capacity": self.capacity,
+                "events": [dataclasses.asdict(e) for e in self.events],
+            },
+            "dispatch": {
+                "decisions": self.decisions,
+                "profiles": json.loads(self.store.to_json()) if self.store else None,
+                "chip": self.chip,
+            },
+        })
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1)
+        return path
+
+    @classmethod
+    def from_dict(cls, raw: dict[str, Any]) -> "Session":
+        trace = raw.get("trace", {})
+        disp = raw.get("dispatch", {})
+        profiles = disp.get("profiles")
+        return cls(
+            meta=raw.get("meta", {}),
+            events=[Event(**row) for row in trace.get("events", [])],
+            dropped=trace.get("dropped", 0),
+            capacity=trace.get("capacity"),
+            decisions=disp.get("decisions", []),
+            store=ProfileStore.from_json(json.dumps(profiles)) if profiles else None,
+            chip=disp.get("chip"),
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "Session":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    # -- analysis ------------------------------------------------------------
+
+    def spans(self) -> list[Span]:
+        return resolve_spans(sorted(self.events, key=lambda e: e.t))
+
+    def report(self) -> dict[str, Any]:
+        """Deterministic per-op / per-backend tables (the CLI renders these).
+
+        Computed only from serialised fields, so ``save → load → report`` is
+        bit-identical to reporting the live session.
+        """
+        spans = self.spans()
+        lat: dict[str, dict[str, float]] = {}
+        for s in spans:
+            if s.dur <= 0:
+                continue
+            row = lat.setdefault(f"{s.track}/{s.name}", {"count": 0, "total_ms": 0.0,
+                                                         "min_ms": float("inf"), "max_ms": 0.0})
+            ms = s.dur * 1e3
+            row["count"] += 1
+            row["total_ms"] += ms
+            row["min_ms"] = min(row["min_ms"], ms)
+            row["max_ms"] = max(row["max_ms"], ms)
+        for row in lat.values():
+            row["mean_ms"] = row["total_ms"] / row["count"]
+
+        by_op: dict[str, dict[str, dict[str, float]]] = {}
+        by_source: dict[str, int] = {}
+        for d in self.decisions:
+            op, backend = d.get("op", "?"), d.get("backend", "?")
+            cell = by_op.setdefault(op, {}).setdefault(
+                backend, {"count": 0, "total_ms": 0.0, "measured": 0}
+            )
+            cell["count"] += 1
+            if isinstance(d.get("measured_s"), (int, float)):
+                cell["measured"] += 1
+                cell["total_ms"] += d["measured_s"] * 1e3
+            src = d.get("source", "?")
+            by_source[src] = by_source.get(src, 0) + 1
+        for backends in by_op.values():
+            for cell in backends.values():
+                cell["mean_ms"] = cell["total_ms"] / cell["measured"] if cell["measured"] else None
+
+        return {
+            "meta": {k: self.meta.get(k) for k in ("schema", "git_sha", "created_unix")},
+            "events": len(self.events),
+            "dropped": self.dropped,
+            "latency": lat,
+            "dispatch": {
+                "decisions": len(self.decisions),
+                "by_op": by_op,
+                "by_source": by_source,
+                "profiled_keys": len(self.store) if self.store else 0,
+            },
+        }
+
+
+def is_session(raw: dict[str, Any]) -> bool:
+    return raw.get("meta", {}).get("schema") == SESSION_SCHEMA
+
+
+def load_profile_store(path: str) -> ProfileStore:
+    """Read a ProfileStore from a session file OR a bare store JSON file."""
+    with open(path) as f:
+        raw = json.load(f)
+    if is_session(raw):
+        profiles = raw.get("dispatch", {}).get("profiles")
+        if not profiles:
+            raise ValueError(f"session {path} carries no profile store")
+        return ProfileStore.from_json(json.dumps(profiles))
+    if "entries" not in raw:
+        # reject arbitrary JSON (a chrome export, a bench artifact, …): a
+        # silently-empty store would make --profile-in a no-op with no signal
+        raise ValueError(
+            f"{path} is neither a trace session nor a ProfileStore JSON "
+            "(expected an 'entries' key)"
+        )
+    return ProfileStore.from_json(json.dumps(raw))
+
+
+def load_profile_stores(paths: list[str]) -> ProfileStore:
+    """Load one or more profile files and merge them into a single store."""
+    stores = [load_profile_store(p) for p in paths]
+    base = stores[0]
+    for s in stores[1:]:
+        base.merge(s)
+    return base
+
+
+# -- diffing ----------------------------------------------------------------
+
+
+def diff_sessions(a: Session, b: Session) -> dict[str, Any]:
+    """Per-key latency + dispatch-choice deltas between two sessions."""
+    ra, rb = a.report(), b.report()
+    lat: dict[str, Any] = {}
+    for key in sorted(set(ra["latency"]) | set(rb["latency"])):
+        la, lb = ra["latency"].get(key), rb["latency"].get(key)
+        if la and lb:
+            lat[key] = {
+                "a_mean_ms": la["mean_ms"], "b_mean_ms": lb["mean_ms"],
+                "delta_pct": (lb["mean_ms"] / la["mean_ms"] - 1.0) * 100 if la["mean_ms"] else None,
+            }
+        else:
+            lat[key] = {"only_in": "a" if la else "b"}
+
+    def modal_backend(rep: dict, op: str) -> Optional[str]:
+        cells = rep["dispatch"]["by_op"].get(op)
+        return max(cells, key=lambda b: cells[b]["count"]) if cells else None
+
+    choices: dict[str, Any] = {}
+    ops = set(ra["dispatch"]["by_op"]) | set(rb["dispatch"]["by_op"])
+    for op in sorted(ops):
+        ca, cb = modal_backend(ra, op), modal_backend(rb, op)
+        choices[op] = {"a": ca, "b": cb, "changed": ca != cb}
+    return {
+        "a": ra["meta"], "b": rb["meta"],
+        "latency": lat,
+        "dispatch_choices": choices,
+        "by_source": {"a": ra["dispatch"]["by_source"], "b": rb["dispatch"]["by_source"]},
+    }
+
+
+def _numeric_leaves(obj: Any, prefix: str = "") -> dict[str, float]:
+    out: dict[str, float] = {}
+    if isinstance(obj, bool):
+        return out
+    if isinstance(obj, (int, float)):
+        out[prefix or "<root>"] = float(obj)
+    elif isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_numeric_leaves(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            out.update(_numeric_leaves(v, f"{prefix}[{i}]"))
+    return out
+
+
+def diff_artifacts(a: dict[str, Any], b: dict[str, Any], top: int = 20) -> dict[str, Any]:
+    """Generic numeric diff for stamped benchmark artifacts (out_all.json).
+
+    Skips provenance stamps (timestamps/SHAs always differ) and ranks shared
+    numeric leaves by relative change.
+    """
+    la, lb = _numeric_leaves(a), _numeric_leaves(b)
+    skip = ("meta.", "created_unix", "timestamp")
+    rows = []
+    for key in sorted(set(la) & set(lb)):
+        if any(s in key for s in skip):
+            continue
+        va, vb = la[key], lb[key]
+        if va == vb:
+            continue
+        # None, not inf, for 0 -> nonzero: json.dumps(Infinity) is not JSON
+        rel = (vb / va - 1.0) * 100 if va else None
+        rows.append({"key": key, "a": va, "b": vb, "delta_pct": rel})
+    rows.sort(key=lambda r: -(abs(r["delta_pct"]) if r["delta_pct"] is not None else float("inf")))
+    return {
+        "a_meta": a.get("meta", {}).get("git_sha"),
+        "b_meta": b.get("meta", {}).get("git_sha"),
+        "changed": rows[:top],
+        "total_changed": len(rows),
+        "only_in_a": sorted(set(la) - set(lb))[:top],
+        "only_in_b": sorted(set(lb) - set(la))[:top],
+    }

@@ -1,0 +1,481 @@
+"""repro.trace subsystem: collector, exporters, sessions, warm-start."""
+import json
+import threading
+
+import pytest
+
+from repro.core.events import Event, EventLog
+from repro.dispatch import DispatchConfig, Dispatcher
+from repro.dispatch.profiles import ProfileStore
+from repro.dispatch.registry import BackendRegistry, BackendTarget
+from repro.trace import (
+    Session,
+    TraceCollector,
+    artifact_meta,
+    diff_artifacts,
+    load_profile_store,
+    resolve_spans,
+    to_chrome_trace,
+    to_folded,
+    to_speedscope,
+)
+from repro.trace.export import export
+
+
+# ---------------------------------------------------------------------------
+# EventLog: interleaved pairing + ring semantics (the two satellite fixes)
+# ---------------------------------------------------------------------------
+
+
+def test_durations_pairs_interleaved_spans_by_payload():
+    """Request A spawns, B spawns, A exits, B exits: the old stack match
+    paired A's spawn with B's exit.  Payload identity must fix it."""
+    log = EventLog()
+    log.record("spawn", "request", payload="A")
+    log.record("spawn", "request", payload="B")
+    # exits arrive in spawn order (FIFO) — a LIFO stack mis-pairs this
+    log.record("exit", "request", payload="A")
+    log.record("exit", "request", payload="B")
+    evs = log.events(name="request")
+    durs = log.durations("request")
+    assert len(durs) == 2
+    a_dur = evs[2].t - evs[0].t
+    b_dur = evs[3].t - evs[1].t
+    assert durs == pytest.approx([a_dur, b_dur])
+    # the buggy stack pairing would have produced these instead:
+    wrong = [evs[2].t - evs[1].t, evs[3].t - evs[0].t]
+    assert durs != pytest.approx(wrong) or a_dur == pytest.approx(wrong[0])
+
+
+def test_durations_pairs_by_span_id():
+    log = EventLog()
+    with log.lifecycle("step", {"unhashable": True}):  # dict payload: span id carries
+        with log.lifecycle("step", {"unhashable": True}):
+            pass
+    durs = log.durations("step")
+    assert len(durs) == 2
+    assert durs[0] <= durs[1]  # inner closes first and is shorter
+
+
+def test_durations_stack_fallback_for_legacy_events():
+    log = EventLog()
+    log.record("spawn", "op")
+    log.record("exit", "op")
+    assert len(log.durations("op")) == 1
+
+
+def test_ring_buffer_bounds_and_counts_drops():
+    log = EventLog(maxlen=4)
+    for i in range(10):
+        log.record("mark", "m", i)
+    assert len(log) == 4
+    assert log.dropped == 6
+    raw = json.loads(log.to_json())
+    assert raw["dropped"] == 6 and raw["maxlen"] == 4
+    assert [e["payload"] for e in raw["events"]] == [6, 7, 8, 9]
+    log.clear()
+    assert len(log) == 0 and log.dropped == 0
+
+
+def test_global_log_is_bounded():
+    from repro.core.events import GLOBAL_LOG
+
+    assert GLOBAL_LOG.maxlen is not None
+
+
+# ---------------------------------------------------------------------------
+# Collector: tracks, spans, stats, thread-safety
+# ---------------------------------------------------------------------------
+
+
+def test_collector_tracks_and_stats():
+    col = TraceCollector(capacity=128)
+    with col.lifecycle("step", 0):
+        pass
+    col.record("spawn", "request", 1)
+    col.record("exit", "request", 1)
+    col.record("dispatch", "attention", {"backend": "ref", "measured_s": 0.001})
+    col.record("mark", "custom_thing")
+    tracks = col.tracks()
+    assert [e.name for e in tracks["step"]] == ["step", "step"]
+    assert len(tracks["request"]) == 2
+    assert len(tracks["dispatch"]) == 1
+    assert len(tracks["other"]) == 1
+    st = col.stats()
+    assert st["events"] == 6 and st["dropped"] == 0 and st["capacity"] == 128
+    assert st["per_track"]["request"] == 2
+
+
+def test_collector_stress_multithreaded():
+    col = TraceCollector(capacity=256)
+    n_threads, per_thread = 8, 200
+
+    def work(tid: int):
+        for i in range(per_thread):
+            if i % 3 == 0:
+                with col.lifecycle("step", (tid, i)):
+                    pass
+            else:
+                col.record("mark", "m", (tid, i))
+
+    threads = [threading.Thread(target=work, args=(t,)) for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    total = sum(2 if i % 3 == 0 else 1 for i in range(per_thread)) * n_threads
+    assert len(col) == 256  # ring full
+    assert len(col) + col.dropped == total
+    col.spans()  # resolution over a torn ring must not raise
+    col.stats()
+
+
+def test_resolve_spans_drops_orphan_exits():
+    evs = [
+        Event(1.0, "exit", "request", "evicted-spawn"),
+        Event(2.0, "spawn", "request", "ok"),
+        Event(3.0, "exit", "request", "ok"),
+    ]
+    spans = resolve_spans(evs)
+    assert len(spans) == 1 and spans[0].dur == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+
+def _sample_collector() -> TraceCollector:
+    col = TraceCollector(capacity=512)
+    for rid in range(3):
+        col.record("spawn", "request", rid)
+    for rid in range(3):
+        col.record("dispatch", "serve_decode",
+                   {"op": "serve_decode", "backend": "chunked", "measured_s": 0.002})
+        col.record("exit", "request", rid)
+    col.record("straggler", "step", {"step": 4, "s": 0.5})
+    return col
+
+
+def test_chrome_trace_export_is_valid_trace_event_json():
+    col = _sample_collector()
+    text = export(col.events(), "chrome", collector=col)
+    doc = json.loads(text)  # must be valid JSON
+    rows = doc["traceEvents"]
+    assert rows, "no trace events exported"
+    for row in rows:
+        assert "ph" in row and "pid" in row
+        if row["ph"] != "M":
+            assert "ts" in row
+    phases = {r["ph"] for r in rows}
+    # requests carry payload ids -> async b/e pairs (viewer pairs by id, not
+    # by per-tid LIFO, so interleaved requests render correctly)
+    assert {"b", "e", "X", "M"} <= phases
+    # b/e balanced per (tid, name, id); B/E (legacy) balanced per (tid, name)
+    depth: dict = {}
+    for r in rows:
+        if r["ph"] in ("b", "e"):
+            assert "id" in r
+            k = (r.get("tid"), r["name"], r["id"])
+            depth[k] = depth.get(k, 0) + (1 if r["ph"] == "b" else -1)
+        elif r["ph"] in ("B", "E"):
+            k = (r.get("tid"), r["name"])
+            depth[k] = depth.get(k, 0) + (1 if r["ph"] == "B" else -1)
+    assert all(v == 0 for v in depth.values())
+    # dispatch X events carry a duration in microseconds
+    xs = [r for r in rows if r["ph"] == "X"]
+    assert all(r["dur"] == pytest.approx(2000, rel=1e-3) for r in xs)
+    # thread metadata names the tracks
+    names = {r["args"]["name"] for r in rows if r["ph"] == "M" and r["name"] == "thread_name"}
+    assert {"request", "dispatch"} <= names
+
+
+def test_speedscope_export_schema():
+    col = _sample_collector()
+    doc = json.loads(export(col.events(), "speedscope", collector=col))
+    assert doc["$schema"] == "https://www.speedscope.app/file-format-schema.json"
+    assert doc["profiles"], "no profiles"
+    frames = doc["shared"]["frames"]
+    for p in doc["profiles"]:
+        assert p["type"] == "sampled"
+        assert len(p["samples"]) == len(p["weights"])
+        assert all(0 <= s[0] < len(frames) for s in p["samples"])
+        assert p["endValue"] == pytest.approx(sum(p["weights"]))
+
+
+def test_folded_export():
+    col = _sample_collector()
+    text = export(col.events(), "folded", collector=col)
+    lines = [ln for ln in text.splitlines() if ln]
+    assert lines
+    for ln in lines:
+        stack, count = ln.rsplit(" ", 1)
+        assert int(count) >= 0 and ";" in stack
+    assert any(ln.startswith("dispatch;serve_decode;chunked") for ln in lines)
+
+
+def test_chrome_interleaved_requests_pair_by_id():
+    """Overlapping same-name spans must not rely on viewer LIFO pairing."""
+    col = TraceCollector()
+    col.record("spawn", "request", "A")
+    col.record("spawn", "request", "B")
+    col.record("exit", "request", "A")
+    col.record("exit", "request", "B")
+    rows = [r for r in to_chrome_trace(col.events(), collector=col)["traceEvents"]
+            if r["ph"] in ("b", "e")]
+    assert len(rows) == 4
+    by_id: dict = {}
+    for r in rows:
+        by_id.setdefault(r["id"], []).append(r["ph"])
+    assert all(phs == ["b", "e"] for phs in by_id.values())
+    assert len(by_id) == 2
+
+
+def test_partition_decisions_flow_through_trace_pipeline(tmp_path):
+    """partition() records unexecuted decisions (no measured_s); report,
+    export and profile ingestion must all tolerate them."""
+    from repro.core.sdfg import extract
+    import jax.numpy as jnp
+
+    col = TraceCollector()
+    disp = Dispatcher(DispatchConfig(policy="roofline"), log=col)
+    graph = extract(lambda x: jnp.tanh(x @ x.T), jnp.ones((8, 8)))
+    disp.partition(graph)
+    assert disp.decisions and all(d.measured_s is None for d in disp.decisions)
+    assert all("measured_s" not in (e.payload or {}) for e in col.events(kind="dispatch"))
+    sess = Session.capture(col, dispatcher=disp)
+    rep = sess.report()  # must not raise
+    assert rep["dispatch"]["decisions"] == len(disp.decisions)
+    json.loads(export(col.events(), "chrome", collector=col))  # must not raise
+    assert ProfileStore().ingest_event_log(col) == 0  # nothing measured
+
+
+def test_cfg_min_samples_governs_provided_store():
+    store = ProfileStore(min_samples=2)
+    store.record("op", "be", "<s>", 0.001)
+    store.record("op", "be", "<s>", 0.001)
+    disp = Dispatcher(DispatchConfig(policy="profiled", min_samples=5),
+                      registry=_registry(), store=store, log=TraceCollector())
+    assert disp.store.min_samples == 5
+    assert not disp.store.warm("op", "be", "<s>")  # 2 samples < cfg's 5
+
+
+def test_export_unknown_format_raises():
+    with pytest.raises(ValueError):
+        export([], "perfetto-proto")
+
+
+# ---------------------------------------------------------------------------
+# Sessions: round trip, profiles, diff
+# ---------------------------------------------------------------------------
+
+
+def _variants() -> dict:
+    import time as _time
+
+    # deterministic speed gap: "slow" sleeps 2ms, so min-wall-time argmin is
+    # always "fast" regardless of scheduler noise
+    return {"fast": lambda x: x + 1, "slow": lambda x: _time.sleep(0.002) or x + 1}
+
+
+def _registry() -> BackendRegistry:
+    reg = BackendRegistry()
+    reg.register(BackendTarget(name="fast", impl="ref", launch_overhead_s=1e-7))
+    reg.register(BackendTarget(name="slow", impl="ref", launch_overhead_s=1e-5))
+    return reg
+
+
+def _cheap_dispatcher(log) -> Dispatcher:
+    disp = Dispatcher(DispatchConfig(policy="profiled", min_samples=2),
+                      registry=_registry(), log=log)
+    variants = _variants()
+    for _ in range(6):
+        disp.dispatch("inc", variants, 1.0)
+    return disp
+
+
+def test_session_round_trip_identical_report(tmp_path):
+    col = _sample_collector()
+    disp = _cheap_dispatcher(col)
+    sess = Session.capture(col, dispatcher=disp, meta={"driver": "test"})
+    before = sess.report()
+    path = sess.save(str(tmp_path / "t.json"))
+    loaded = Session.load(path)
+    assert loaded.report() == before
+    assert loaded.meta["schema"] == "repro.trace.session/v1"
+    assert loaded.meta["driver"] == "test"
+    assert "git_sha" in loaded.meta and "created_unix" in loaded.meta
+    assert len(loaded.store) == len(disp.store)
+    assert loaded.chip and loaded.chip["name"] == disp.chip.name
+
+
+def test_session_report_contents(tmp_path):
+    col = _sample_collector()
+    disp = _cheap_dispatcher(col)
+    rep = Session.capture(col, dispatcher=disp).report()
+    assert rep["dispatch"]["decisions"] == 6
+    assert "inc" in rep["dispatch"]["by_op"]
+    assert rep["dispatch"]["by_source"].get("explore", 0) >= 4  # 2 backends × min_samples
+    assert any(k.startswith("request/") for k in rep["latency"])
+
+
+def test_load_profile_store_from_session_and_bare(tmp_path):
+    col = TraceCollector()
+    disp = _cheap_dispatcher(col)
+    sess_path = Session.capture(col, dispatcher=disp).save(str(tmp_path / "s.json"))
+    bare_path = str(tmp_path / "p.json")
+    with open(bare_path, "w") as f:
+        f.write(disp.store.to_json())
+    for path in (sess_path, bare_path):
+        store = load_profile_store(path)
+        assert len(store) == len(disp.store)
+        assert store.warm("inc", "fast", "<scalar>")
+
+
+def test_warm_start_skips_exploration(tmp_path):
+    cold_log = TraceCollector()
+    cold = _cheap_dispatcher(cold_log)
+    assert cold.summary()["explore_dispatches"] >= 4
+
+    path = Session.capture(cold_log, dispatcher=cold).save(str(tmp_path / "s.json"))
+    warm = _cheap_dispatcher_with_store(load_profile_store(path))
+    assert warm.summary()["explore_dispatches"] == 0
+    # first decision already lands on the steady-state (measured) choice
+    assert warm.decisions[0].source == "measured"
+    assert warm.decisions[0].backend == cold.decisions[-1].backend
+
+
+def _cheap_dispatcher_with_store(store: ProfileStore) -> Dispatcher:
+    disp = Dispatcher(DispatchConfig(policy="profiled", min_samples=2),
+                      registry=_registry(), store=store, log=TraceCollector())
+    variants = _variants()
+    for _ in range(4):
+        disp.dispatch("inc", variants, 1.0)
+    return disp
+
+
+def test_profile_store_merge_welford_exact():
+    a, b, ref = ProfileStore(), ProfileStore(), ProfileStore()
+    xs = [0.5, 1.0, 1.5, 2.0, 5.0]
+    for i, x in enumerate(xs):
+        (a if i % 2 else b).record("op", "be", "<s>", x)
+        ref.record("op", "be", "<s>", x)
+    a.merge(b)
+    ea, er = a.entry("op", "be", "<s>"), ref.entry("op", "be", "<s>")
+    assert ea.count == er.count
+    assert ea.mean_s == pytest.approx(er.mean_s)
+    assert ea.variance == pytest.approx(er.variance)
+    assert ea.min_s == er.min_s
+
+
+def test_load_profile_store_rejects_non_store_json(tmp_path):
+    bogus = str(tmp_path / "chrome.json")
+    with open(bogus, "w") as f:
+        json.dump({"traceEvents": []}, f)
+    with pytest.raises(ValueError, match="entries"):
+        load_profile_store(bogus)
+
+
+def test_load_profile_stores_merges_multiple(tmp_path):
+    from repro.trace import load_profile_stores
+
+    paths = []
+    for i in range(2):
+        s = ProfileStore()
+        s.record("op", "be", "<s>", 0.001 * (i + 1))
+        p = str(tmp_path / f"s{i}.json")
+        with open(p, "w") as f:
+            f.write(s.to_json())
+        paths.append(p)
+    merged = load_profile_stores(paths)
+    assert merged.entry("op", "be", "<s>").count == 2
+
+
+def test_dispatcher_keeps_provided_empty_store():
+    empty = ProfileStore(min_samples=2)
+    disp = Dispatcher(DispatchConfig(policy="profiled", min_samples=2),
+                      registry=_registry(), store=empty, log=TraceCollector())
+    assert disp.store is empty  # truthiness of an empty store must not drop it
+
+
+def test_diff_artifacts_zero_to_nonzero_is_json_safe():
+    a = {"meta": artifact_meta(), "x": {"dropped": 0}}
+    b = {"meta": artifact_meta(), "x": {"dropped": 5}}
+    out = diff_artifacts(a, b)
+    row = next(r for r in out["changed"] if r["key"] == "x.dropped")
+    assert row["delta_pct"] is None
+    json.dumps(out, allow_nan=False)  # must not contain Infinity/NaN
+
+
+def test_chrome_trace_no_negative_ts_for_leading_dispatch():
+    col = TraceCollector()
+    col.record("dispatch", "op", {"op": "op", "backend": "ref", "measured_s": 0.004})
+    doc = to_chrome_trace(col.events(), collector=col)
+    xs = [r for r in doc["traceEvents"] if r["ph"] == "X"]
+    assert xs and all(r["ts"] >= 0 for r in xs)
+
+
+def test_custom_tracks_get_distinct_tids():
+    col = TraceCollector(track_of={"alpha_op": "alpha", "beta_op": "beta"})
+    with col.lifecycle("alpha_op"):
+        pass
+    with col.lifecycle("beta_op"):
+        pass
+    doc = to_chrome_trace(col.events(), collector=col)
+    names = {r["tid"]: r["args"]["name"] for r in doc["traceEvents"]
+             if r["ph"] == "M" and r["name"] == "thread_name"}
+    assert sorted(names.values()) == ["alpha", "beta"]
+    assert len(set(names)) == 2
+
+
+def test_cli_diff_mixed_types_errors(tmp_path, capsys):
+    from repro.trace.cli import main
+
+    col = _sample_collector()
+    pa = Session.capture(col).save(str(tmp_path / "a.json"))
+    pb = str(tmp_path / "bench.json")
+    with open(pb, "w") as f:
+        json.dump({"meta": artifact_meta(), "x": 1}, f)
+    assert main(["diff", pa, pb]) == 2
+    assert "cannot diff" in capsys.readouterr().err
+
+
+def test_diff_artifacts_on_stamped_bench_json():
+    a = {"meta": artifact_meta(), "kernels": {"attention_ms": 2.0, "rwkv_ms": 8.0}}
+    b = {"meta": artifact_meta(), "kernels": {"attention_ms": 1.0, "rwkv_ms": 8.0}}
+    assert a["meta"]["schema"] == "repro.bench/v1"
+    assert a["meta"]["git_sha"] and "chip" in a["meta"]
+    out = diff_artifacts(a, b)
+    keys = [r["key"] for r in out["changed"]]
+    assert "kernels.attention_ms" in keys
+    assert "kernels.rwkv_ms" not in keys  # unchanged
+    assert not any("meta" in k or "created_unix" in k for k in keys)
+
+
+# ---------------------------------------------------------------------------
+# CLI (in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_cli_report_export_diff(tmp_path, capsys):
+    from repro.trace.cli import main
+
+    col = _sample_collector()
+    disp = _cheap_dispatcher(col)
+    pa = Session.capture(col, dispatcher=disp).save(str(tmp_path / "a.json"))
+    col2 = _sample_collector()
+    disp2 = _cheap_dispatcher(col2)
+    pb = Session.capture(col2, dispatcher=disp2).save(str(tmp_path / "b.json"))
+
+    assert main(["report", pa]) == 0
+    out = capsys.readouterr().out
+    assert "dispatch" in out and "inc" in out
+
+    chrome = str(tmp_path / "a.chrome.json")
+    assert main(["export", pa, "--format", "chrome", "-o", chrome]) == 0
+    doc = json.load(open(chrome))
+    assert doc["traceEvents"]
+
+    assert main(["diff", pa, pb]) == 0
+    out = capsys.readouterr().out
+    assert "dispatch choices" in out
