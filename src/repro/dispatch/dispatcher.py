@@ -83,6 +83,12 @@ class Dispatcher:
         # a --profile-in store restored with a different min_samples would
         # silently override cfg.min_samples otherwise
         self.store.min_samples = self.cfg.min_samples
+        # new measurements are stamped with the environment that produced
+        # them, so a later --profile-in can age out entries whose code or
+        # hardware no longer matches (profile invalidation)
+        from repro.trace.session import git_sha
+
+        self.store.set_stamp(git_sha=git_sha(), chip=self.registry.chip.name)
         self.log = GLOBAL_LOG if log is None else log
         self.decisions: list[DispatchDecision] = []
 

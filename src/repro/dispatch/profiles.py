@@ -48,14 +48,29 @@ def profile_key(op: str, backend: str, sig: str) -> str:
     return f"{op}|{backend}|{sig}"
 
 
+def _combine_stamp(a: str, b: str) -> str:
+    """Provenance of samples from two environments: agreement persists,
+    disagreement (including stamped vs unstamped) degrades to ``"mixed"``,
+    which never matches a real SHA/chip so age_out evicts it."""
+    return a if a == b else "mixed"
+
+
 @dataclasses.dataclass
 class ProfileEntry:
-    """Welford running stats over observed wall-times for one key."""
+    """Welford running stats over observed wall-times for one key.
+
+    ``git_sha``/``chip`` stamp where the samples came from: a measurement is
+    only trustworthy on the code and hardware that produced it, and
+    :meth:`ProfileStore.age_out` evicts entries whose stamp no longer matches
+    the current environment (profile invalidation).  Empty = legacy/unknown.
+    """
 
     count: int = 0
     mean_s: float = 0.0
     m2: float = 0.0
     min_s: float = float("inf")
+    git_sha: str = ""
+    chip: str = ""
 
     def add(self, seconds: float) -> None:
         self.count += 1
@@ -73,17 +88,66 @@ class ProfileStore:
     def __init__(self, min_samples: int = 2) -> None:
         self.min_samples = min_samples
         self._entries: dict[str, ProfileEntry] = {}
+        # provenance applied to entries as they receive samples; set via
+        # set_stamp() (the Dispatcher stamps with its chip + the repo SHA)
+        self._stamp_git = ""
+        self._stamp_chip = ""
+
+    # -- provenance ----------------------------------------------------------
+
+    def set_stamp(self, git_sha: str = "", chip: str = "") -> None:
+        """Declare the environment new samples are measured in."""
+        self._stamp_git = git_sha
+        self._stamp_chip = chip
+
+    def age_out(self, git_sha: str = "", chip: str = "") -> list[dict[str, str]]:
+        """Evict entries stamped with a *different* git SHA or chip.
+
+        Stored profiles are only valid on the code + hardware that measured
+        them; a mismatched entry is dropped so the dispatcher re-explores
+        instead of trusting stale timings.  Unstamped (legacy) entries are
+        kept.  Returns one ``{"key", "reason"}`` record per eviction so
+        callers can log why warm-start data disappeared.
+        """
+        aged: list[dict[str, str]] = []
+        for key, e in list(self._entries.items()):
+            reason = None
+            if git_sha and e.git_sha and e.git_sha != git_sha:
+                reason = f"git_sha changed ({e.git_sha} -> {git_sha})"
+            elif chip and e.chip and e.chip != chip:
+                reason = f"chip changed ({e.chip} -> {chip})"
+            if reason is not None:
+                del self._entries[key]
+                aged.append({"key": key, "reason": reason})
+        return aged
 
     # -- writers -------------------------------------------------------------
 
+    def _entry_for_write(self, key: str) -> ProfileEntry:
+        """Get-or-create an entry about to receive current-environment samples.
+
+        A fresh entry takes the store's stamp outright.  An existing entry's
+        stamp may only persist if it agrees with the current environment —
+        overwriting would launder old samples under a fresh stamp, hiding
+        them from age_out (same rule as merge(): disagreement means
+        'mixed', which never survives an invalidation pass).
+        """
+        e = self._entries.get(key)
+        if e is None:
+            e = self._entries[key] = ProfileEntry(
+                git_sha=self._stamp_git, chip=self._stamp_chip
+            )
+        else:
+            e.git_sha = _combine_stamp(e.git_sha, self._stamp_git)
+            e.chip = _combine_stamp(e.chip, self._stamp_chip)
+        return e
+
     def record(self, op: str, backend: str, sig: str, seconds: float) -> None:
-        key = profile_key(op, backend, sig)
-        self._entries.setdefault(key, ProfileEntry()).add(seconds)
+        self._entry_for_write(profile_key(op, backend, sig)).add(seconds)
 
     def observe_timing(self, op: str, backend: str, sig: str, stats: TimingStats) -> None:
         """Fold a hyperfine benchmark result in as ``stats.runs`` samples."""
-        key = profile_key(op, backend, sig)
-        e = self._entries.setdefault(key, ProfileEntry())
+        e = self._entry_for_write(profile_key(op, backend, sig))
         mean_s = stats.mean_ms / 1e3
         for _ in range(max(stats.runs, 1)):
             e.add(mean_s)
@@ -137,12 +201,18 @@ class ProfileStore:
 
         Welford states combine exactly (Chan et al. parallel variance), so
         merging N per-run stores equals one store that saw every sample.
-        Returns the number of keys touched.
+        Entries merged from *different* environments get a ``"mixed"`` stamp:
+        it never matches a real SHA/chip, so :meth:`age_out` conservatively
+        evicts them — samples of unknown provenance must not survive an
+        invalidation pass.  Returns the number of keys touched.
         """
+
         for k, o in other._entries.items():
             e = self._entries.get(k)
             if e is None:
-                self._entries[k] = ProfileEntry(o.count, o.mean_s, o.m2, o.min_s)
+                self._entries[k] = ProfileEntry(
+                    o.count, o.mean_s, o.m2, o.min_s, o.git_sha, o.chip
+                )
                 continue
             n = e.count + o.count
             if n == 0:
@@ -152,18 +222,29 @@ class ProfileStore:
             e.mean_s = e.mean_s + delta * o.count / n
             e.count = n
             e.min_s = min(e.min_s, o.min_s)
+            e.git_sha = _combine_stamp(e.git_sha, o.git_sha)
+            e.chip = _combine_stamp(e.chip, o.chip)
         return len(other._entries)
 
     # -- persistence ---------------------------------------------------------
 
     def to_json(self) -> str:
+        def row(e: ProfileEntry) -> dict[str, Any]:
+            d: dict[str, Any] = {"count": e.count, "mean_s": e.mean_s,
+                                 "m2": e.m2, "min_s": e.min_s}
+            if e.git_sha:
+                d["git_sha"] = e.git_sha
+            if e.chip:
+                d["chip"] = e.chip
+            return d
+
+        # list() snapshots the dict in one GIL-atomic step: a concurrent
+        # record() inserting a new key (e.g. streaming rotation on another
+        # thread serialising mid-run) must not break iteration
         return json.dumps(
             {
                 "min_samples": self.min_samples,
-                "entries": {
-                    k: {"count": e.count, "mean_s": e.mean_s, "m2": e.m2, "min_s": e.min_s}
-                    for k, e in self._entries.items()
-                },
+                "entries": {k: row(e) for k, e in list(self._entries.items())},
             },
             indent=1,
         )
@@ -176,6 +257,7 @@ class ProfileStore:
             store._entries[k] = ProfileEntry(
                 count=d["count"], mean_s=d["mean_s"], m2=d.get("m2", 0.0),
                 min_s=d.get("min_s", float("inf")),
+                git_sha=d.get("git_sha", ""), chip=d.get("chip", ""),
             )
         return store
 

@@ -5,9 +5,12 @@
 
 Observability (repro.trace): --trace-out t.json snapshots the whole run —
 events, dispatch decisions, measured profiles, chip + git metadata — for
-`python -m repro.trace {report,export,diff}`; --profile-in warm-starts the
-profiled dispatcher from a previous session (skips exploration);
---profile-out writes the bare ProfileStore for the next run.
+`python -m repro.trace {report,export,diff}`; --trace-dir D streams events
+durably as rotated JSONL segments while the server runs (a crash loses at
+most the open segment; `python -m repro.trace compact D` recovers);
+--profile-in warm-starts the profiled dispatcher from a previous session
+(skips exploration; entries stamped with a different git SHA or chip are
+aged out first); --profile-out writes the bare ProfileStore for the next run.
 """
 from __future__ import annotations
 
@@ -22,7 +25,13 @@ from repro.configs import get_config, reduced
 from repro.dispatch import DispatchConfig, Dispatcher
 from repro.models import lm
 from repro.serving.engine import Engine, ServeConfig
-from repro.trace import Session, TraceCollector, load_profile_stores
+from repro.trace import (
+    Session,
+    StreamingSession,
+    TraceCollector,
+    age_out_profiles,
+    load_profile_stores,
+)
 
 
 def main() -> None:
@@ -44,6 +53,12 @@ def main() -> None:
                     help="backend pinned by --dispatch static")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a repro.trace session snapshot of this run")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="stream events durably as rotated JSONL segments "
+                         "(crash loses at most the open segment; recover with "
+                         "`python -m repro.trace compact DIR`)")
+    ap.add_argument("--trace-rotate", type=int, default=2048, metavar="N",
+                    help="events per streaming segment before rotation+fsync")
     ap.add_argument("--trace-capacity", type=int, default=65536,
                     help="trace ring-buffer capacity (events); evictions are counted")
     ap.add_argument("--profile-in", action="append", default=None, metavar="PATH",
@@ -60,6 +75,7 @@ def main() -> None:
     params = lm.init_params(cfg, key)
     log = TraceCollector(capacity=args.trace_capacity)
     dispatcher = None
+    aged = []
     if args.dispatch != "off":
         store = load_profile_stores(args.profile_in) if args.profile_in else None
         dispatcher = Dispatcher(
@@ -67,6 +83,16 @@ def main() -> None:
             log=log,
             store=store,
         )
+        if args.profile_in:
+            aged = age_out_profiles(dispatcher.store, dispatcher.chip.name)
+    stream = None
+    if args.trace_dir:
+        stream = StreamingSession(
+            args.trace_dir,
+            rotate_events=args.trace_rotate,
+            meta={"driver": "serve", "arch": cfg.name, "requests": args.requests},
+            store_provider=(lambda: dispatcher.store) if dispatcher is not None else None,
+        ).attach(log)
     eng = Engine(
         cfg,
         params,
@@ -102,7 +128,10 @@ def main() -> None:
         rec["dispatch_events"] = len(log.events(kind="dispatch"))
         if args.profile_in:
             rec["profile_in"] = args.profile_in
+            rec["profile_aged_out"] = len(aged)
     rec["trace"] = log.stats()
+    if stream is not None:
+        rec["trace_dir"] = stream.close(stats=log.stats())
     if args.trace_out:
         sess = Session.capture(
             log, dispatcher=dispatcher,

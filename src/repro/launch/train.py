@@ -27,7 +27,13 @@ from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.dispatch import DispatchConfig, Dispatcher, with_impl
 from repro.distributed import sharding as shd
 from repro.runtime.supervisor import FailureInjector, Supervisor, SupervisorConfig
-from repro.trace import Session, TraceCollector, load_profile_stores
+from repro.trace import (
+    Session,
+    StreamingSession,
+    TraceCollector,
+    age_out_profiles,
+    load_profile_stores,
+)
 from repro.training.step import (
     TrainConfig,
     abstract_train_state,
@@ -72,6 +78,12 @@ def main() -> None:
                     help="backend pinned by --dispatch static")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a repro.trace session snapshot of this run")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="stream events durably as rotated JSONL segments "
+                         "(crash loses at most the open segment; recover with "
+                         "`python -m repro.trace compact DIR`)")
+    ap.add_argument("--trace-rotate", type=int, default=2048, metavar="N",
+                    help="events per streaming segment before rotation+fsync")
     ap.add_argument("--trace-capacity", type=int, default=65536,
                     help="trace ring-buffer capacity (events); evictions are counted")
     ap.add_argument("--profile-in", action="append", default=None, metavar="PATH",
@@ -112,12 +124,15 @@ def main() -> None:
         )
         dispatcher = None
         step_variants = None
+        aged = []
         if args.dispatch != "off":
             store = load_profile_stores(args.profile_in) if args.profile_in else None
             dispatcher = Dispatcher(
                 DispatchConfig(policy=args.dispatch, static_backend=args.dispatch_backend),
                 store=store,
             )
+            if args.profile_in:
+                aged = age_out_profiles(dispatcher.store, dispatcher.chip.name)
             step_variants = {
                 t.name: jax.jit(
                     with_impl(t.impl, make_train_step(cfg, tcfg)),
@@ -139,6 +154,15 @@ def main() -> None:
         log = TraceCollector(capacity=args.trace_capacity)
         if dispatcher is not None:
             dispatcher.log = log
+        stream = None
+        if args.trace_dir:
+            stream = StreamingSession(
+                args.trace_dir,
+                rotate_events=args.trace_rotate,
+                meta={"driver": "train", "arch": cfg.name, "mesh": args.mesh,
+                      "steps": args.steps},
+                store_provider=(lambda: dispatcher.store) if dispatcher is not None else None,
+            ).attach(log)
         fail_at = tuple(int(s) for s in args.fail_at.split(",") if s)
         sup = Supervisor(
             SupervisorConfig(
@@ -154,6 +178,7 @@ def main() -> None:
             failures=FailureInjector(fail_at),
             dispatcher=dispatcher,
             step_variants=step_variants,
+            stream=stream,
         )
         t0 = time.time()
         out = sup.run()
@@ -177,7 +202,10 @@ def main() -> None:
         rec["dispatch_events"] = len(log.events(kind="dispatch"))
         if args.profile_in:
             rec["profile_in"] = args.profile_in
+            rec["profile_aged_out"] = len(aged)
     rec["trace"] = log.stats()
+    if stream is not None:
+        rec["trace_dir"] = stream.close(stats=log.stats())
     if args.trace_out:
         sess = Session.capture(
             log, dispatcher=dispatcher,

@@ -81,6 +81,7 @@ class Supervisor:
         failures: Optional[FailureInjector] = None,
         dispatcher: Optional[Dispatcher] = None,
         step_variants: Optional[Mapping[str, Callable]] = None,
+        stream: Optional[Any] = None,
     ) -> None:
         self.cfg = cfg
         self.train_step = train_step
@@ -89,6 +90,10 @@ class Supervisor:
         # the argmin-cost compiled variant (see repro.dispatch)
         self.dispatcher = dispatcher
         self.step_variants = dict(step_variants) if step_variants else None
+        # durable trace sink (repro.trace.StreamingSession): rotated at every
+        # checkpoint so the on-disk trace is never staler than the on-disk
+        # model state — a crash recovers both to the same point
+        self.stream = stream
         self.state = init_state
         self.state_shardings = state_shardings
         self.log = GLOBAL_LOG if log is None else log
@@ -157,6 +162,8 @@ class Supervisor:
                 if self.step % self.cfg.ckpt_every == 0:
                     with self.log.lifecycle("checkpoint", self.step):
                         self.ckpt.save(self.step, self.state)
+                    if self.stream is not None:
+                        self.stream.rotate()
             except NodeFailure:
                 self.restarts += 1
                 if self.restarts > self.cfg.max_restarts:
@@ -166,6 +173,8 @@ class Supervisor:
         with self.log.lifecycle("checkpoint", self.step):
             self.ckpt.save(self.step, self.state)
             self.ckpt.wait()
+        if self.stream is not None:
+            self.stream.rotate()
         return {
             "steps": self.step,
             "restarts": self.restarts,

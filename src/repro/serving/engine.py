@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.events import GLOBAL_LOG, EventLog
+from repro.core.events import GLOBAL_LOG, EventLog, next_span_id
 from repro.dispatch.cost import estimate_callable
 from repro.dispatch.dispatcher import Dispatcher, with_impl
 from repro.dispatch.profiles import signature
@@ -48,6 +48,7 @@ class Request:
     out: list[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     done: bool = False
+    span: int = 0  # trace span id shared by the request's spawn/exit events
 
 
 class Engine:
@@ -128,9 +129,11 @@ class Engine:
     # -- client API ----------------------------------------------------------
 
     def submit(self, prompt: list[int], max_new: int = 32) -> int:
-        req = Request(next(self._rid), list(prompt), max_new)
+        req = Request(next(self._rid), list(prompt), max_new, span=next_span_id())
         self.queue.append(req)
-        self.log.record("spawn", "request", req.rid)
+        # span id pairs this spawn with the exit in _decode_tick even when
+        # requests interleave (exporters and durations() pair by span first)
+        self.log.record("spawn", "request", req.rid, span=req.span)
         return req.rid
 
     def run_to_completion(self) -> dict[int, list[int]]:
@@ -193,7 +196,7 @@ class Engine:
             if len(r.out) >= r.max_new or hit_eos or out_of_room:
                 r.done = True
                 self.active[r.slot] = None
-                self.log.record("exit", "request", r.rid)
+                self.log.record("exit", "request", r.rid, span=r.span)
                 finished.append(r)
         return finished
 

@@ -3,24 +3,32 @@
 The observability layer over :mod:`repro.core.events`:
 
 * :mod:`repro.trace.collector` — bounded ring-buffer :class:`TraceCollector`
-  (capacity + dropped-event accounting, per-track views, span resolution);
+  (capacity + dropped-event accounting, reserved per-track rings, per-track
+  views, span resolution, streaming sink hook);
 * :mod:`repro.trace.export` — Chrome Trace Event JSON (Perfetto), speedscope,
   folded flamegraph stacks;
 * :mod:`repro.trace.session` — one-file run snapshots (events + dispatch
   decisions + ProfileStore + chip + git/config metadata) with warm-start
-  reload;
-* :mod:`repro.trace.cli` — ``python -m repro.trace {report,export,diff}``.
+  reload, diffing and CI regression gating;
+* :mod:`repro.trace.stream` — durable :class:`StreamingSession` sinks
+  (rotated, fsynced JSONL segments + manifest; a crash loses at most the
+  open segment) and crash recovery back into sessions;
+* :mod:`repro.trace.cli` — ``python -m repro.trace {report,export,diff,compact}``.
 """
 from repro.trace.collector import Span, TraceCollector, resolve_spans
 from repro.trace.export import export, to_chrome_trace, to_folded, to_speedscope
 from repro.trace.session import (
     Session,
+    age_out_profiles,
     artifact_meta,
+    artifact_regressions,
     diff_artifacts,
     diff_sessions,
     load_profile_store,
     load_profile_stores,
+    session_regressions,
 )
+from repro.trace.stream import StreamingSession, load_any, load_stream
 
 __all__ = [
     "Span",
@@ -31,9 +39,15 @@ __all__ = [
     "to_folded",
     "to_speedscope",
     "Session",
+    "StreamingSession",
+    "age_out_profiles",
     "artifact_meta",
+    "artifact_regressions",
     "diff_artifacts",
     "diff_sessions",
+    "load_any",
     "load_profile_store",
     "load_profile_stores",
+    "load_stream",
+    "session_regressions",
 ]

@@ -2,23 +2,39 @@
 
   PYTHONPATH=src python -m repro.trace report  t.json
   PYTHONPATH=src python -m repro.trace export  t.json --format chrome -o t.chrome.json
-  PYTHONPATH=src python -m repro.trace diff    a.json b.json
+  PYTHONPATH=src python -m repro.trace diff    a.json b.json [--fail-over-pct 25]
+  PYTHONPATH=src python -m repro.trace compact run_dir/ -o session.json
 
 ``report`` prints per-op / per-backend latency tables for one session;
 ``export`` renders it for a standard viewer (Perfetto / speedscope /
 flamegraph.pl); ``diff`` compares two sessions — or two stamped benchmark
-artifacts (``benchmarks/out_all.json``) — across runs / PRs.
+artifacts (``benchmarks/out_all.json``) — across runs / PRs, and with
+``--fail-over-pct`` exits non-zero on latency/throughput regressions past the
+threshold (the CI gate); ``compact`` folds a streaming segment directory
+(``--trace-dir``) back into the one-file session format.  ``report``,
+``export`` and ``diff`` also accept segment directories directly.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import Any
 
 from repro.trace.export import FORMATS
 from repro.trace.export import export as render
-from repro.trace.session import Session, diff_artifacts, diff_sessions, is_session
+from repro.trace.session import (
+    Session,
+    artifact_regressions,
+    diff_artifacts,
+    diff_sessions,
+    is_session,
+    session_regressions,
+)
+from repro.trace.stream import load_any, load_stream
+
+EXIT_REGRESSION = 3  # distinct from argparse (2) and generic failure (1)
 
 
 def _fmt_ms(v: Any) -> str:
@@ -46,17 +62,26 @@ def _print_report(rep: dict[str, Any]) -> None:
 
 
 def cmd_report(args: argparse.Namespace) -> int:
-    rep = Session.load(args.session).report()
+    sess = load_any(args.session)
+    rep = sess.report()
     if args.json:
         print(json.dumps(rep, indent=1))
     else:
         _print_report(rep)
+        stream = sess.meta.get("stream")
+        if stream:
+            print(f"\nstream   {stream['segments']} closed segments"
+                  + (f", {stream['open_segments']} open "
+                     f"(salvaged {stream['salvaged_events']} events)"
+                     if stream["open_segments"] else "")
+                  + (f", {stream['skipped_lines']} torn lines skipped"
+                     if stream["skipped_lines"] else ""))
     return 0
 
 
 def cmd_export(args: argparse.Namespace) -> int:
-    sess = Session.load(args.session)
-    text = render(sess.events, args.format)
+    sess = load_any(args.session)
+    text = render(sess.events, args.format, meta=sess.meta)
     if args.out:
         with open(args.out, "w") as f:
             f.write(text)
@@ -66,11 +91,43 @@ def cmd_export(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_compact(args: argparse.Namespace) -> int:
+    sess = load_stream(args.dir)
+    path = sess.save(args.out)
+    stream = sess.meta["stream"]
+    print(f"compacted {stream['segments']} closed + {stream['open_segments']} open "
+          f"segments -> {path} ({len(sess.events)} events"
+          + (f", {stream['skipped_lines']} torn lines skipped"
+             if stream["skipped_lines"] else "") + ")")
+    return 0
+
+
+def _load_raw(path: str) -> dict[str, Any]:
+    """A session/artifact JSON dict from a file — or a segment directory."""
+    if os.path.isdir(path):
+        return load_stream(path).to_dict()
+    with open(path) as f:
+        return json.load(f)
+
+
+def _gate(regs: list[dict[str, Any]], pct: float) -> int:
+    # all gate chatter goes to stderr: with --json, stdout carries exactly one
+    # machine-readable document
+    if not regs:
+        print(f"\nregression gate: OK (no latency/throughput change over {pct:g}%)",
+              file=sys.stderr)
+        return 0
+    print(f"\nregression gate FAILED: {len(regs)} metric(s) worse by more than "
+          f"{pct:g}%", file=sys.stderr)
+    for r in regs:
+        print(f"  REGRESSION {r['kind']:<10} {r['key']}: "
+              f"{r['a']:.6g} -> {r['b']:.6g} ({r['delta_pct']:+.1f}%)",
+              file=sys.stderr)
+    return EXIT_REGRESSION
+
+
 def cmd_diff(args: argparse.Namespace) -> int:
-    with open(args.a) as f:
-        raw_a = json.load(f)
-    with open(args.b) as f:
-        raw_b = json.load(f)
+    raw_a, raw_b = _load_raw(args.a), _load_raw(args.b)
     if is_session(raw_a) != is_session(raw_b):
         which = args.a if is_session(raw_a) else args.b
         other = args.b if is_session(raw_a) else args.a
@@ -78,40 +135,47 @@ def cmd_diff(args: argparse.Namespace) -> int:
                   f"JSON ({other}); pass two sessions or two bench artifacts")
         print(ap_err, file=sys.stderr)
         return 2
+    regressions: list[dict[str, Any]] = []
     if is_session(raw_a) and is_session(raw_b):
         out = diff_sessions(Session.from_dict(raw_a), Session.from_dict(raw_b))
+        if args.fail_over_pct is not None:
+            regressions = session_regressions(out, args.fail_over_pct)
         if args.json:
-            print(json.dumps(out, indent=1))
-            return 0
-        print(f"a: git={out['a'].get('git_sha')}  b: git={out['b'].get('git_sha')}")
-        if out["latency"]:
-            print(f"\n{'track/name':<28}{'a_mean_ms':>10}{'b_mean_ms':>10}{'delta_%':>9}")
-            for key, row in sorted(out["latency"].items()):
-                if "only_in" in row:
-                    print(f"{key:<28}  (only in {row['only_in']})")
-                else:
-                    d = row["delta_pct"]
-                    print(f"{key:<28}" + _fmt_ms(row["a_mean_ms"]) + _fmt_ms(row["b_mean_ms"])
-                          + (f"{d:>+9.1f}" if d is not None else f"{'-':>9}"))
-        changed = {op: r for op, r in out["dispatch_choices"].items() if r["changed"]}
-        if out["dispatch_choices"]:
-            print(f"\ndispatch choices changed: {len(changed)}/{len(out['dispatch_choices'])}")
-            for op, r in sorted(changed.items()):
-                print(f"  {op}: {r['a']} -> {r['b']}")
-            print(f"exploration (source counts): a={out['by_source']['a']}  "
-                  f"b={out['by_source']['b']}")
+            print(json.dumps({**out, "regressions": regressions}, indent=1))
+        else:
+            print(f"a: git={out['a'].get('git_sha')}  b: git={out['b'].get('git_sha')}")
+            if out["latency"]:
+                print(f"\n{'track/name':<28}{'a_mean_ms':>10}{'b_mean_ms':>10}{'delta_%':>9}")
+                for key, row in sorted(out["latency"].items()):
+                    if "only_in" in row:
+                        print(f"{key:<28}  (only in {row['only_in']})")
+                    else:
+                        d = row["delta_pct"]
+                        print(f"{key:<28}" + _fmt_ms(row["a_mean_ms"]) + _fmt_ms(row["b_mean_ms"])
+                              + (f"{d:>+9.1f}" if d is not None else f"{'-':>9}"))
+            changed = {op: r for op, r in out["dispatch_choices"].items() if r["changed"]}
+            if out["dispatch_choices"]:
+                print(f"\ndispatch choices changed: {len(changed)}/{len(out['dispatch_choices'])}")
+                for op, r in sorted(changed.items()):
+                    print(f"  {op}: {r['a']} -> {r['b']}")
+                print(f"exploration (source counts): a={out['by_source']['a']}  "
+                      f"b={out['by_source']['b']}")
     else:
         out = diff_artifacts(raw_a, raw_b)
+        if args.fail_over_pct is not None:
+            regressions = artifact_regressions(raw_a, raw_b, args.fail_over_pct)
         if args.json:
-            print(json.dumps(out, indent=1))
-            return 0
-        print(f"a: git={out['a_meta']}  b: git={out['b_meta']}  "
-              f"changed leaves: {out['total_changed']}")
-        print(f"{'key':<52}{'a':>12}{'b':>12}{'delta_%':>9}")
-        for row in out["changed"]:
-            d = row["delta_pct"]
-            print(f"{row['key']:<52}{row['a']:>12.4g}{row['b']:>12.4g}"
-                  + (f"{d:>+9.1f}" if d is not None else f"{'new':>9}"))
+            print(json.dumps({**out, "regressions": regressions}, indent=1))
+        else:
+            print(f"a: git={out['a_meta']}  b: git={out['b_meta']}  "
+                  f"changed leaves: {out['total_changed']}")
+            print(f"{'key':<52}{'a':>12}{'b':>12}{'delta_%':>9}")
+            for row in out["changed"]:
+                d = row["delta_pct"]
+                print(f"{row['key']:<52}{row['a']:>12.4g}{row['b']:>12.4g}"
+                      + (f"{d:>+9.1f}" if d is not None else f"{'new':>9}"))
+    if args.fail_over_pct is not None:
+        return _gate(regressions, args.fail_over_pct)
     return 0
 
 
@@ -120,20 +184,29 @@ def main(argv: list[str] | None = None) -> int:
     sub = ap.add_subparsers(dest="cmd", required=True)
 
     p = sub.add_parser("report", help="per-op / per-backend latency tables for one session")
-    p.add_argument("session")
+    p.add_argument("session", help="session JSON or streaming segment directory")
     p.add_argument("--json", action="store_true", help="machine-readable output")
     p.set_defaults(fn=cmd_report)
 
     p = sub.add_parser("export", help="render a session for a standard trace viewer")
-    p.add_argument("session")
+    p.add_argument("session", help="session JSON or streaming segment directory")
     p.add_argument("--format", choices=sorted(FORMATS), default="chrome")
     p.add_argument("-o", "--out", default=None, help="output path (default: stdout)")
     p.set_defaults(fn=cmd_export)
 
+    p = sub.add_parser("compact",
+                       help="fold a streaming segment directory into one session file")
+    p.add_argument("dir", help="directory written by --trace-dir")
+    p.add_argument("-o", "--out", default="session.json", help="output session path")
+    p.set_defaults(fn=cmd_compact)
+
     p = sub.add_parser("diff", help="compare two sessions (or two bench artifacts)")
-    p.add_argument("a")
-    p.add_argument("b")
+    p.add_argument("a", help="session JSON, segment directory, or bench artifact")
+    p.add_argument("b", help="session JSON, segment directory, or bench artifact")
     p.add_argument("--json", action="store_true")
+    p.add_argument("--fail-over-pct", type=float, default=None, metavar="PCT",
+                   help="exit non-zero if any latency grew (or throughput "
+                        "shrank) by more than PCT%% — the CI regression gate")
     p.set_defaults(fn=cmd_diff)
 
     args = ap.parse_args(argv)

@@ -11,6 +11,15 @@ write into a bounded collector unchanged.  On top of the raw log it adds:
 * **tracks** — the per-unit views (step / microbatch / request / checkpoint /
   dispatch) a trace viewer renders as rows; event names map onto tracks via
   ``TRACK_OF`` (extensible per collector);
+* **track-aware sampling** — tracks listed in ``track_capacity`` get their
+  own dedicated rings, so a flood of hot request spans cannot evict the few
+  tiny-but-precious dispatch or checkpoint events (one global ``maxlen``
+  evicts exactly the wrong things under skewed load).  By default the
+  ``dispatch`` and ``checkpoint`` tracks are reserved;
+* **streaming sink** — ``set_sink(fn)`` invokes ``fn(event)`` on every
+  record *before* any ring eviction, which is how a
+  :class:`~repro.trace.stream.StreamingSession` persists the full event
+  stream even beyond ring capacity;
 * **closed spans** — spawn/exit pairs resolved into ``Span`` records (by span
   id / payload identity, interleaving-safe), the unit every exporter in
   :mod:`repro.trace.export` consumes.
@@ -18,7 +27,9 @@ write into a bounded collector unchanged.  On top of the raw log it adds:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterable, Mapping, Optional
+import time
+from collections import deque
+from typing import Any, Callable, Iterable, Mapping, Optional
 
 from repro.core.events import Event, EventLog, _pair_key
 
@@ -40,6 +51,11 @@ TRACK_OF: dict[str, str] = {
 
 TRACKS = ("step", "microbatch", "request", "checkpoint", "dispatch", "other")
 
+# Reserved per-track ring sizes: dispatch decisions and checkpoint lifecycle
+# events are rare and small but drive warm-start + recovery analysis — they
+# must survive a request-span flood that wraps the main ring many times over.
+DEFAULT_TRACK_CAPACITY: dict[str, int] = {"dispatch": 4096, "checkpoint": 1024}
+
 
 @dataclasses.dataclass(frozen=True)
 class Span:
@@ -58,26 +74,121 @@ class Span:
 
 
 class TraceCollector(EventLog):
-    """Bounded EventLog with track views and span resolution."""
+    """Bounded EventLog with track views, reserved rings and span resolution."""
 
     def __init__(
         self,
         capacity: int | None = DEFAULT_CAPACITY,
         *,
         track_of: Optional[Mapping[str, str]] = None,
+        track_capacity: Optional[Mapping[str, int]] = None,
+        sink: Optional[Callable[[Event], None]] = None,
     ) -> None:
         super().__init__(maxlen=capacity)
         self._track_of = dict(TRACK_OF)
         if track_of:
             self._track_of.update(track_of)
+        caps = DEFAULT_TRACK_CAPACITY if track_capacity is None else dict(track_capacity)
+        self._rings: dict[str, deque[Event]] = {
+            t: deque(maxlen=n) for t, n in caps.items() if n
+        }
+        self._ring_dropped: dict[str, int] = {t: 0 for t in self._rings}
+        self._sink = sink
+        self._sink_error: Optional[str] = None
+
+    # -- streaming sink ------------------------------------------------------
+
+    def set_sink(self, sink: Optional[Callable[[Event], None]]) -> None:
+        """Install a per-event callback (e.g. ``StreamingSession.emit``).
+
+        The sink sees every event exactly once, before ring eviction, so a
+        durable stream is a superset of the in-memory ring — provided the
+        stream is closed only after all recording threads have quiesced (the
+        sink runs outside the collector lock, so an in-flight record() racing
+        ``StreamingSession.close()`` would be dropped by the sealed stream;
+        every driver closes after its run loop has fully joined)."""
+        self._sink = sink
+
+    # -- recording (track-aware) ---------------------------------------------
+
+    def _track_for(self, kind: str, name: str) -> str:
+        if kind == "dispatch":
+            return "dispatch"
+        return self._track_of.get(name, "other")
+
+    def record(self, kind: str, name: str, payload: Any = None, *, span: int = 0) -> None:
+        ev = Event(time.monotonic(), kind, name, payload, span)
+        track = self._track_for(kind, name)
+        ring = self._rings.get(track)
+        with self._lock:
+            if ring is not None:
+                if ring.maxlen is not None and len(ring) == ring.maxlen:
+                    self._ring_dropped[track] += 1
+                ring.append(ev)
+            else:
+                if self._events.maxlen is not None and len(self._events) == self._events.maxlen:
+                    self._dropped += 1
+                self._events.append(ev)
+        sink = self._sink
+        if sink is not None:  # outside the lock: sink I/O must not block writers
+            try:
+                sink(ev)
+            except Exception as exc:
+                # a broken sink (ENOSPC, closed file) must not take down the
+                # traced run: detach it and surface the error via stats()
+                self._sink = None
+                self._sink_error = f"{type(exc).__name__}: {exc}"
+                import sys
+
+                print(f"trace sink detached after error: {self._sink_error}",
+                      file=sys.stderr)
+
+    def events(self, kind: str | None = None, name: str | None = None) -> list[Event]:
+        with self._lock:
+            evs = list(self._events)
+            for ring in self._rings.values():
+                evs.extend(ring)
+        evs.sort(key=lambda e: e.t)
+        if kind is not None:
+            evs = [e for e in evs if e.kind == kind]
+        if name is not None:
+            evs = [e for e in evs if e.name == name]
+        return evs
+
+    @property
+    def dropped(self) -> int:
+        with self._lock:
+            return self._dropped + sum(self._ring_dropped.values())
+
+    def dropped_by_track(self) -> dict[str, int]:
+        """Per-reserved-track eviction counts (main-ring losses under ``""``)."""
+        with self._lock:
+            out = dict(self._ring_dropped)
+            out[""] = self._dropped
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._events.clear()
+            self._dropped = 0
+            for ring in self._rings.values():
+                ring.clear()
+            self._ring_dropped = {t: 0 for t in self._rings}
+
+    def to_json(self) -> str:
+        import json
+
+        rows = [dataclasses.asdict(e) for e in self.events()]
+        return json.dumps(
+            {"dropped": self.dropped, "maxlen": self.maxlen, "events": rows},
+            default=repr,
+        )
 
     # -- track views ---------------------------------------------------------
 
     def track_name(self, event: Event) -> str:
         """The viewer row an event belongs to (dispatch is kind-keyed)."""
-        if event.kind == "dispatch":
-            return "dispatch"
-        return self._track_of.get(event.name, "other")
+        return self._track_for(event.kind, event.name)
 
     def track(self, track: str) -> list[Event]:
         return [e for e in self.events() if self.track_name(e) == track]
@@ -97,12 +208,21 @@ class TraceCollector(EventLog):
 
     def stats(self) -> dict[str, Any]:
         per_track = {t: len(evs) for t, evs in self.tracks().items()}
+        with self._lock:
+            track_capacity = {t: r.maxlen for t, r in self._rings.items()}
         return {
             "events": len(self),
             "capacity": self.maxlen,
             "dropped": self.dropped,
             "per_track": per_track,
+            "track_capacity": track_capacity,
+            "dropped_by_track": self.dropped_by_track(),
+            "sink_error": self._sink_error,
         }
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._events) + sum(len(r) for r in self._rings.values())
 
 
 def resolve_spans(events: Iterable[Event], track_name=None) -> list[Span]:

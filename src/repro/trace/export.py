@@ -128,8 +128,15 @@ def to_speedscope(
     *,
     collector: Optional[TraceCollector] = None,
     name: str = "repro.trace",
+    meta: Optional[dict[str, Any]] = None,
 ) -> dict[str, Any]:
-    """Speedscope file: one sampled profile per track, spans as samples."""
+    """Speedscope file: one sampled profile per track, spans as samples.
+
+    ``meta`` (session provenance) titles the profile with the run's git SHA
+    so stacked speedscope tabs from different runs stay distinguishable.
+    """
+    if meta and meta.get("git_sha") and name == "repro.trace":
+        name = f"repro.trace@{meta['git_sha']}"
     spans = resolve_spans(sorted(events, key=lambda e: e.t), _tracker(collector))
     frames: list[dict[str, str]] = []
     frame_idx: dict[str, int] = {}
@@ -166,7 +173,10 @@ def to_speedscope(
 
 
 def to_folded(
-    events: Iterable[Event], *, collector: Optional[TraceCollector] = None
+    events: Iterable[Event],
+    *,
+    collector: Optional[TraceCollector] = None,
+    meta: Optional[dict[str, Any]] = None,  # accepted for exporter uniformity
 ) -> str:
     """Folded flamegraph stacks: ``track;name <microseconds>`` per line."""
     spans = resolve_spans(sorted(events, key=lambda e: e.t), _tracker(collector))

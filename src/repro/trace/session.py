@@ -12,6 +12,7 @@ exploration phase entirely (the measured warm-start crossover).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 import subprocess
@@ -27,6 +28,7 @@ SESSION_SCHEMA = "repro.trace.session/v1"
 ARTIFACT_SCHEMA = "repro.bench/v1"
 
 
+@functools.lru_cache(maxsize=1)
 def git_sha() -> str:
     try:
         return subprocess.run(
@@ -241,6 +243,20 @@ def load_profile_stores(paths: list[str]) -> ProfileStore:
     return base
 
 
+def age_out_profiles(store: ProfileStore, chip_name: str) -> list[dict[str, str]]:
+    """Invalidate ``--profile-in`` entries measured on different code/hardware.
+
+    Compares each entry's git SHA / chip stamp against the *current* repo SHA
+    and the given chip, evicting mismatches so the dispatcher re-explores
+    instead of trusting stale timings.  Every eviction is logged to stderr
+    with its reason (drivers surface the count in their JSON output).
+    """
+    aged = store.age_out(git_sha=git_sha(), chip=chip_name)
+    for a in aged:
+        print(f"profile-in: aged out {a['key']}: {a['reason']}", file=sys.stderr)
+    return aged
+
+
 # -- diffing ----------------------------------------------------------------
 
 
@@ -317,3 +333,58 @@ def diff_artifacts(a: dict[str, Any], b: dict[str, Any], top: int = 20) -> dict[
         "only_in_a": sorted(set(la) - set(lb))[:top],
         "only_in_b": sorted(set(lb) - set(la))[:top],
     }
+
+
+# -- regression gating (CI) --------------------------------------------------
+#
+# `repro.trace diff --fail-over-pct P` turns a diff into a failing check:
+# latency-like metrics that grew by more than P%, or throughput-like metrics
+# that shrank by more than P%, are regressions.  Keys are classified by their
+# leaf name so provenance stamps and counters never trip the gate.
+
+_THROUGHPUT_HINTS = ("per_s", "throughput", "flops")
+_TIME_HINTS = ("latency", "wall", "duration")
+_TIME_SUFFIXES = ("_ms", "_s", "_us", "_seconds")
+
+
+def _leaf_name(key: str) -> str:
+    return key.rsplit(".", 1)[-1].split("[", 1)[0].lower()
+
+
+def artifact_regressions(
+    a: dict[str, Any], b: dict[str, Any], fail_over_pct: float
+) -> list[dict[str, Any]]:
+    """Regressed time/throughput leaves between two stamped bench artifacts."""
+    la, lb = _numeric_leaves(a), _numeric_leaves(b)
+    skip = ("meta.", "created_unix", "timestamp")
+    regs: list[dict[str, Any]] = []
+    for key in sorted(set(la) & set(lb)):
+        if any(s in key for s in skip):
+            continue
+        va, vb = la[key], lb[key]
+        if va == vb or not va:
+            continue
+        delta = (vb / va - 1.0) * 100
+        leaf = _leaf_name(key)
+        if any(h in leaf for h in _THROUGHPUT_HINTS):
+            if delta < -fail_over_pct:
+                regs.append({"key": key, "a": va, "b": vb, "delta_pct": delta,
+                             "kind": "throughput"})
+        elif leaf.endswith(_TIME_SUFFIXES) or any(h in leaf for h in _TIME_HINTS):
+            if delta > fail_over_pct:
+                regs.append({"key": key, "a": va, "b": vb, "delta_pct": delta,
+                             "kind": "latency"})
+    return regs
+
+
+def session_regressions(
+    diff: dict[str, Any], fail_over_pct: float
+) -> list[dict[str, Any]]:
+    """Regressed per-track latency rows from a :func:`diff_sessions` output."""
+    regs: list[dict[str, Any]] = []
+    for key, row in sorted(diff.get("latency", {}).items()):
+        d = row.get("delta_pct")
+        if isinstance(d, (int, float)) and d > fail_over_pct:
+            regs.append({"key": key, "a": row["a_mean_ms"], "b": row["b_mean_ms"],
+                         "delta_pct": d, "kind": "latency"})
+    return regs

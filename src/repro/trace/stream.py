@@ -1,0 +1,343 @@
+"""Durable streaming trace sessions: JSONL segments + manifest + recovery.
+
+:class:`~repro.trace.session.Session` snapshots a run *at the end*; a crash
+loses the whole trace.  A :class:`StreamingSession` is the durable
+counterpart: every event is appended to an open JSONL segment file as it is
+recorded (attach it to a :class:`~repro.trace.collector.TraceCollector` as a
+sink), and segments rotate on a size/count budget.  Rotation is the
+durability point — the closing segment is flushed **and fsynced** before it
+is renamed from ``*.jsonl.open`` to ``*.jsonl``, the manifest is atomically
+rewritten, and (when a profile provider is attached) the current
+:class:`~repro.dispatch.profiles.ProfileStore` is snapshotted next to it.
+A SIGKILLed run therefore loses at most the tail of the one open segment.
+
+On-disk layout of a session directory::
+
+    MANIFEST.json          # schema + git/chip/argv provenance + segment index
+    segment-000000.jsonl   # closed (fsynced) segments, one Event per line
+    segment-000001.jsonl
+    segment-000002.jsonl.open   # the open segment a crash may truncate
+    profiles.json          # ProfileStore snapshot as of the last rotation
+
+``python -m repro.trace compact <dir> -o session.json`` folds the segments
+back into the one-file session format; ``report``/``export``/``diff`` accept
+segment directories directly (they compact in memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import threading
+from typing import Any, Callable, Optional
+
+from repro.core.events import Event
+from repro.dispatch.profiles import ProfileStore
+from repro.trace.session import SESSION_SCHEMA, Session, run_metadata
+
+STREAM_SCHEMA = "repro.trace.stream/v1"
+MANIFEST_NAME = "MANIFEST.json"
+PROFILES_NAME = "profiles.json"
+SEGMENT_PREFIX = "segment-"
+OPEN_SUFFIX = ".open"
+
+DEFAULT_ROTATE_EVENTS = 2048
+DEFAULT_ROTATE_BYTES = 4 << 20  # 4 MiB
+
+
+def _atomic_write(path: str, text: str) -> None:
+    """Write-then-rename with fsync: readers never see a torn file."""
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+class StreamingSession:
+    """Appends events incrementally as rotated, fsynced JSONL segments.
+
+    Thread-safe (events arrive from the checkpoint writer thread as well as
+    the main loop).  Use as a sink on a collector::
+
+        stream = StreamingSession("run_dir", rotate_events=2048)
+        stream.attach(collector)          # every collector.record() streams
+        ...
+        stream.close(stats=collector.stats())
+
+    ``store_provider`` (a zero-arg callable returning a ProfileStore) makes
+    each rotation also persist the measured profiles, so a crashed run keeps
+    its warm-start data up to the last closed segment.
+    """
+
+    def __init__(
+        self,
+        path: str,
+        *,
+        rotate_events: int = DEFAULT_ROTATE_EVENTS,
+        rotate_bytes: int = DEFAULT_ROTATE_BYTES,
+        meta: Optional[dict[str, Any]] = None,
+        chip: Optional[dict[str, Any]] = None,
+        store_provider: Optional[Callable[[], ProfileStore]] = None,
+    ) -> None:
+        if rotate_events < 1:
+            raise ValueError(f"rotate_events must be >= 1, got {rotate_events}")
+        self.path = path
+        self.rotate_events = rotate_events
+        self.rotate_bytes = rotate_bytes
+        self.store_provider = store_provider
+        if chip is None:
+            from repro.hw.specs import default_chip
+
+            chip = dataclasses.asdict(default_chip())
+        self._manifest: dict[str, Any] = {
+            "schema": STREAM_SCHEMA,
+            **run_metadata(meta),
+            "chip": chip,
+            "rotate_events": rotate_events,
+            "rotate_bytes": rotate_bytes,
+            "segments": [],
+            "closed": False,
+        }
+        self._lock = threading.Lock()
+        self._seg_index = 0
+        self._seg_events = 0
+        self._seg_bytes = 0
+        self._seg_file: Optional[Any] = None
+        self._total_events = 0
+        self._closed = False
+        os.makedirs(path, exist_ok=True)
+        leftover = glob.glob(os.path.join(path, f"{SEGMENT_PREFIX}*.jsonl*"))
+        if leftover or os.path.exists(os.path.join(path, MANIFEST_NAME)):
+            # never overwrite or silently merge with a previous session — its
+            # segments may be the only copy of a crashed run's trace
+            raise FileExistsError(
+                f"{path} already holds a streaming trace session; compact it "
+                f"(`python -m repro.trace compact {path}`) and remove the "
+                "directory, or pass a fresh --trace-dir"
+            )
+        self._write_manifest()
+        self._open_segment()
+
+    # -- wiring ---------------------------------------------------------------
+
+    def attach(self, collector: Any) -> "StreamingSession":
+        """Register as the collector's event sink (returns self)."""
+        collector.set_sink(self.emit)
+        return self
+
+    def __enter__(self) -> "StreamingSession":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    # -- segment plumbing -----------------------------------------------------
+
+    def _seg_name(self, index: int) -> str:
+        return f"{SEGMENT_PREFIX}{index:06d}.jsonl"
+
+    def _open_segment(self) -> None:
+        self._seg_file = open(
+            os.path.join(self.path, self._seg_name(self._seg_index) + OPEN_SUFFIX), "w"
+        )
+        self._seg_events = 0
+        self._seg_bytes = 0
+
+    def _write_manifest(self) -> None:
+        _atomic_write(
+            os.path.join(self.path, MANIFEST_NAME),
+            json.dumps(self._manifest, indent=1, default=repr),
+        )
+
+    def _close_segment_locked(self) -> None:
+        """Flush + fsync + rename the open segment; record it in the manifest."""
+        f = self._seg_file
+        if f is None:
+            return
+        f.flush()
+        os.fsync(f.fileno())
+        f.close()
+        self._seg_file = None
+        name = self._seg_name(self._seg_index)
+        os.replace(os.path.join(self.path, name + OPEN_SUFFIX),
+                   os.path.join(self.path, name))
+        self._manifest["segments"].append(
+            {"name": name, "events": self._seg_events, "bytes": self._seg_bytes}
+        )
+        self._seg_index += 1
+        self._snapshot_profiles_locked()
+        self._write_manifest()
+
+    def _snapshot_profiles_locked(self) -> None:
+        """Persist the current ProfileStore next to the segments (best
+        effort): a failed snapshot must not abort the event stream — the
+        segments are the primary artifact, profiles are warm-start gravy."""
+        if self.store_provider is None:
+            return
+        try:
+            store = self.store_provider()
+            if store is not None:
+                _atomic_write(os.path.join(self.path, PROFILES_NAME), store.to_json())
+                self._manifest["profiles"] = PROFILES_NAME
+        except Exception as exc:
+            import sys
+
+            print(f"trace stream: profile snapshot failed ({type(exc).__name__}: "
+                  f"{exc}); segments unaffected", file=sys.stderr)
+
+    # -- the streaming path ---------------------------------------------------
+
+    def emit(self, event: Event) -> None:
+        """Append one event to the open segment (the collector-sink entry)."""
+        line = json.dumps(dataclasses.asdict(event), default=repr) + "\n"
+        with self._lock:
+            if self._closed:
+                return
+            self._seg_file.write(line)
+            self._seg_file.flush()  # crash-visible immediately; fsync on rotate
+            self._seg_events += 1
+            self._seg_bytes += len(line)
+            self._total_events += 1
+            if self._seg_events >= self.rotate_events or self._seg_bytes >= self.rotate_bytes:
+                self._close_segment_locked()
+                self._open_segment()
+
+    def rotate(self) -> None:
+        """Force a rotation (e.g. aligned with a checkpoint): make the
+        current segment durable even if it is under the rotation budget."""
+        with self._lock:
+            if self._closed or self._seg_events == 0:
+                return
+            self._close_segment_locked()
+            self._open_segment()
+
+    def close(self, stats: Optional[dict[str, Any]] = None) -> str:
+        """Seal the session: final rotation + closed manifest.  Idempotent."""
+        with self._lock:
+            if self._closed:
+                return self.path
+            if self._seg_events > 0:
+                self._close_segment_locked()
+            elif self._seg_file is not None:
+                # empty open segment: remove rather than leave a zero-byte file
+                name = self._seg_name(self._seg_index) + OPEN_SUFFIX
+                self._seg_file.close()
+                self._seg_file = None
+                os.unlink(os.path.join(self.path, name))
+            # final profile snapshot: samples recorded since the last
+            # rotation must survive the run
+            self._snapshot_profiles_locked()
+            self._manifest["closed"] = True
+            self._manifest["total_events"] = self._total_events
+            if stats is not None:
+                self._manifest["collector"] = stats
+            self._write_manifest()
+            self._closed = True
+        return self.path
+
+
+# -- recovery / compaction ---------------------------------------------------
+
+
+def is_stream_dir(path: str) -> bool:
+    return os.path.isdir(path) and (
+        os.path.exists(os.path.join(path, MANIFEST_NAME))
+        or bool(glob.glob(os.path.join(path, f"{SEGMENT_PREFIX}*.jsonl*")))
+    )
+
+
+def _read_segment(path: str, lenient: bool) -> tuple[list[Event], int]:
+    """Parse one JSONL segment.  ``lenient`` tolerates a torn tail line
+    (the open segment of a crashed run); closed segments are fsynced and a
+    parse failure there is reported too rather than raising."""
+    events: list[Event] = []
+    skipped = 0
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+                events.append(Event(**row))
+            except (json.JSONDecodeError, TypeError):
+                skipped += 1
+                if not lenient:
+                    raise
+    return events, skipped
+
+
+def load_stream(path: str) -> Session:
+    """Recover a segment directory into a :class:`Session` (crash-safe).
+
+    Reads the manifest for provenance, every closed ``segment-*.jsonl`` in
+    order, and salvages complete lines from any ``*.open`` segment the crash
+    left behind.  Dispatch decisions are rebuilt from the streamed
+    ``dispatch`` events; profiles come from the last rotation's snapshot.
+    """
+    manifest: dict[str, Any] = {}
+    mpath = os.path.join(path, MANIFEST_NAME)
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+
+    closed = sorted(glob.glob(os.path.join(path, f"{SEGMENT_PREFIX}*.jsonl")))
+    open_segs = sorted(glob.glob(os.path.join(path, f"{SEGMENT_PREFIX}*.jsonl{OPEN_SUFFIX}")))
+    if not closed and not open_segs and not manifest:
+        raise FileNotFoundError(f"{path} is not a streaming trace session "
+                                f"(no {MANIFEST_NAME} or {SEGMENT_PREFIX}*.jsonl)")
+
+    events: list[Event] = []
+    skipped = 0
+    for seg in closed:
+        evs, bad = _read_segment(seg, lenient=True)
+        events.extend(evs)
+        skipped += bad
+    salvaged = 0
+    for seg in open_segs:
+        evs, bad = _read_segment(seg, lenient=True)
+        events.extend(evs)
+        salvaged += len(evs)
+        skipped += bad
+    events.sort(key=lambda e: e.t)
+
+    decisions = [e.payload for e in events
+                 if e.kind == "dispatch" and isinstance(e.payload, dict)]
+    store = None
+    ppath = os.path.join(path, PROFILES_NAME)
+    if os.path.exists(ppath):
+        with open(ppath) as f:
+            store = ProfileStore.from_json(f.read())
+
+    meta = {k: v for k, v in manifest.items()
+            if k not in ("schema", "segments", "chip", "closed")}
+    meta["schema"] = SESSION_SCHEMA
+    meta["stream"] = {
+        "dir": path,
+        "schema": manifest.get("schema", STREAM_SCHEMA),
+        "closed": manifest.get("closed", False),
+        "segments": len(closed),
+        "open_segments": len(open_segs),
+        "salvaged_events": salvaged,
+        "skipped_lines": skipped,
+    }
+    collector_stats = manifest.get("collector") or {}
+    return Session(
+        meta=meta,
+        events=events,
+        dropped=collector_stats.get("dropped", 0),
+        capacity=collector_stats.get("capacity"),
+        decisions=decisions,
+        store=store,
+        chip=manifest.get("chip"),
+    )
+
+
+def load_any(path: str) -> Session:
+    """Load a one-file session OR a streaming segment directory."""
+    if os.path.isdir(path):
+        return load_stream(path)
+    return Session.load(path)

@@ -1,0 +1,371 @@
+"""repro.trace.stream: durable streaming sessions, crash recovery, CI gate."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core.events import Event
+from repro.dispatch.profiles import ProfileStore
+from repro.trace import (
+    Session,
+    StreamingSession,
+    TraceCollector,
+    artifact_meta,
+    load_any,
+    load_stream,
+)
+from repro.trace.cli import EXIT_REGRESSION, main
+from repro.trace.session import SESSION_SCHEMA
+from repro.trace.stream import MANIFEST_NAME, PROFILES_NAME
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# StreamingSession: rotation, manifest, durability
+# ---------------------------------------------------------------------------
+
+
+def test_stream_rotation_and_manifest(tmp_path):
+    d = str(tmp_path / "run")
+    col = TraceCollector(capacity=128)
+    stream = StreamingSession(d, rotate_events=5,
+                              meta={"driver": "test"}).attach(col)
+    for i in range(12):
+        with col.lifecycle("request", i):
+            pass
+    stream.close(stats=col.stats())
+
+    names = sorted(os.listdir(d))
+    segs = [n for n in names if n.startswith("segment-") and n.endswith(".jsonl")]
+    assert MANIFEST_NAME in names
+    assert len(segs) == 5  # 24 events at 5/segment: 4 full + the sealed tail of 4
+    assert not any(n.endswith(".open") for n in names)  # close() seals everything
+
+    manifest = json.load(open(os.path.join(d, MANIFEST_NAME)))
+    assert manifest["schema"] == "repro.trace.stream/v1"
+    assert manifest["closed"] is True
+    assert manifest["driver"] == "test"
+    assert manifest["git_sha"] and manifest["chip"]["name"]
+    assert sum(s["events"] for s in manifest["segments"]) == 24
+    assert [s["name"] for s in manifest["segments"]] == segs
+
+
+def test_stream_compact_round_trips_report(tmp_path):
+    d = str(tmp_path / "run")
+    col = TraceCollector(capacity=128)
+    stream = StreamingSession(d, rotate_events=4).attach(col)
+    for i in range(6):
+        with col.lifecycle("request", i):
+            pass
+    col.record("dispatch", "op", {"op": "op", "backend": "ref",
+                                  "source": "explore", "measured_s": 0.001})
+    stream.close(stats=col.stats())
+
+    sess = load_stream(d)
+    assert len(sess.events) == 13
+    assert sess.decisions and sess.decisions[0]["backend"] == "ref"
+    rep = sess.report()
+    assert rep["latency"]["request/request"]["count"] == 6
+    assert rep["dispatch"]["decisions"] == 1
+    assert sess.meta["schema"] == SESSION_SCHEMA
+    assert sess.meta["stream"]["closed"] is True
+
+
+def test_stream_sink_is_superset_of_bounded_ring(tmp_path):
+    """The durable stream must keep every event, even ones the in-memory
+    ring evicts — that is the point of streaming."""
+    d = str(tmp_path / "run")
+    col = TraceCollector(capacity=8, track_capacity={})
+    stream = StreamingSession(d, rotate_events=16).attach(col)
+    for i in range(50):
+        col.record("mark", "m", i)
+    stream.close(stats=col.stats())
+    assert len(col) == 8 and col.dropped == 42
+    sess = load_stream(d)
+    assert len(sess.events) == 50
+    assert sess.dropped == 42  # collector stats carried via the manifest
+
+
+def test_stream_rotate_snapshots_profiles(tmp_path):
+    d = str(tmp_path / "run")
+    store = ProfileStore()
+    store.record("op", "be", "<s>", 0.001)
+    col = TraceCollector()
+    stream = StreamingSession(d, rotate_events=1000,
+                              store_provider=lambda: store).attach(col)
+    col.record("mark", "m", 0)
+    stream.rotate()  # forced (checkpoint-aligned) rotation under the budget
+    assert os.path.exists(os.path.join(d, PROFILES_NAME))
+    store.record("op", "be", "<s>", 0.002)
+    stream.close()
+    restored = ProfileStore.from_json(open(os.path.join(d, PROFILES_NAME)).read())
+    assert restored.entry("op", "be", "<s>").count == 2  # close() re-snapshots
+    assert load_stream(d).store is not None
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery
+# ---------------------------------------------------------------------------
+
+
+def test_crash_salvages_closed_segments_and_open_tail(tmp_path):
+    """No close(): closed segments are intact, complete lines of the open
+    segment are salvaged, and a torn tail line is skipped, not fatal."""
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    StreamingSession(d, rotate_events=4).attach(col)
+    for i in range(10):
+        col.record("mark", "m", i)
+    # simulated crash: the session is never closed; tear the open segment
+    open_segs = [n for n in os.listdir(d) if n.endswith(".open")]
+    assert len(open_segs) == 1
+    with open(os.path.join(d, open_segs[0]), "a") as f:
+        f.write('{"t": 1.0, "kind": "ma')  # killed mid-write
+
+    sess = load_stream(d)
+    assert [e.payload for e in sess.events] == list(range(10))
+    s = sess.meta["stream"]
+    assert s["closed"] is False
+    assert s["segments"] == 2 and s["open_segments"] == 1
+    assert s["salvaged_events"] == 2 and s["skipped_lines"] == 1
+
+
+def test_stream_refuses_to_reuse_a_session_dir(tmp_path):
+    """A second run pointed at the same --trace-dir must not overwrite or
+    silently merge with the previous session's segments."""
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    stream = StreamingSession(d, rotate_events=4).attach(col)
+    col.record("mark", "m", 0)
+    stream.close()
+    with pytest.raises(FileExistsError, match="compact"):
+        StreamingSession(d)
+    # the crashed-run case (manifest but no close) is protected too
+    d2 = str(tmp_path / "run2")
+    StreamingSession(d2).attach(TraceCollector())
+    with pytest.raises(FileExistsError):
+        StreamingSession(d2)
+
+
+def test_sink_failure_detaches_instead_of_crashing(tmp_path):
+    """A broken sink (ENOSPC, closed file) must not take down the traced
+    run: the collector detaches it and surfaces the error in stats()."""
+    boom = {"n": 0}
+
+    def bad_sink(ev):
+        boom["n"] += 1
+        raise OSError("no space left on device")
+
+    col = TraceCollector(sink=bad_sink)
+    col.record("mark", "m", 0)  # must not raise
+    col.record("mark", "m", 1)
+    assert boom["n"] == 1  # detached after the first failure
+    assert len(col) == 2  # in-memory ring unaffected
+    assert "OSError" in col.stats()["sink_error"]
+
+
+def test_load_stream_rejects_non_stream_dir(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_stream(str(tmp_path / "empty_dir_that_is_missing"))
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(FileNotFoundError):
+        load_stream(str(empty))
+
+
+def test_serve_sigkill_mid_run_recovers(tmp_path):
+    """SIGKILL a `launch.serve --trace-dir` subprocess mid-run: compact must
+    recover every closed segment and report must run on the result."""
+    d = str(tmp_path / "segments")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2-0.5b",
+         "--reduced", "--requests", "48", "--max-new", "16",
+         "--trace-dir", d, "--trace-rotate", "16"],
+        env=env, cwd=REPO, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+    )
+    try:
+        deadline = time.time() + 240
+        while time.time() < deadline:
+            closed = [n for n in os.listdir(d)] if os.path.isdir(d) else []
+            if sum(n.startswith("segment-") and n.endswith(".jsonl") for n in closed) >= 2:
+                break
+            if proc.poll() is not None:
+                out, err = proc.communicate()
+                pytest.fail(f"serve exited before kill: {err.decode()[-2000:]}")
+            time.sleep(0.2)
+        else:
+            pytest.fail("no closed segments appeared within 240s")
+        assert proc.poll() is None, "server must still be mid-run when killed"
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+
+    manifest = json.load(open(os.path.join(d, MANIFEST_NAME)))
+    assert manifest["closed"] is False  # the crash really preempted close()
+    out = str(tmp_path / "recovered.json")
+    assert main(["compact", d, "-o", out]) == 0
+    sess = Session.load(out)
+    # every event of every closed segment survives the kill
+    assert len(sess.events) >= sum(s["events"] for s in manifest["segments"])
+    assert main(["report", out]) == 0
+    assert main(["report", d]) == 0  # report directly on the remnants too
+
+
+# ---------------------------------------------------------------------------
+# CLI: compact + directory inputs + regression gate
+# ---------------------------------------------------------------------------
+
+
+def _closed_stream_dir(tmp_path, name, n=6):
+    d = str(tmp_path / name)
+    col = TraceCollector()
+    stream = StreamingSession(d, rotate_events=4).attach(col)
+    for i in range(n):
+        with col.lifecycle("request", i):
+            pass
+    stream.close(stats=col.stats())
+    return d
+
+
+def test_cli_accepts_segment_dirs_everywhere(tmp_path, capsys):
+    da = _closed_stream_dir(tmp_path, "a")
+    db = _closed_stream_dir(tmp_path, "b")
+    assert main(["report", da]) == 0
+    assert "stream" in capsys.readouterr().out
+    chrome = str(tmp_path / "a.chrome.json")
+    assert main(["export", da, "--format", "chrome", "-o", chrome]) == 0
+    assert json.load(open(chrome))["traceEvents"]
+    assert main(["diff", da, db]) == 0
+    out = str(tmp_path / "a.json")
+    assert main(["compact", da, "-o", out]) == 0
+    assert main(["diff", out, db]) == 0  # file vs dir mixes fine
+    assert load_any(out).report() == load_any(da).report()
+
+
+def _artifact(tmp_path, name, prefill_ms=2.0, tok_s=100.0, explore=4):
+    doc = {
+        "meta": artifact_meta(),
+        "serving": {"mean_prefill_ms": prefill_ms, "tokens_per_s": tok_s},
+        "dispatch": {"by_source": {"explore": explore}},
+    }
+    p = str(tmp_path / name)
+    with open(p, "w") as f:
+        json.dump(doc, f)
+    return p
+
+
+def test_diff_gate_passes_on_identical_artifacts(tmp_path):
+    pa = _artifact(tmp_path, "a.json")
+    assert main(["diff", pa, pa, "--fail-over-pct", "25"]) == 0
+
+
+def test_diff_gate_fails_on_latency_regression(tmp_path, capsys):
+    pa = _artifact(tmp_path, "a.json", prefill_ms=2.0)
+    pb = _artifact(tmp_path, "b.json", prefill_ms=3.0)  # +50% > 25%
+    assert main(["diff", pa, pb, "--fail-over-pct", "25"]) == EXIT_REGRESSION
+    err = capsys.readouterr().err
+    assert "REGRESSION" in err and "mean_prefill_ms" in err
+    # the reverse direction is an improvement, not a regression
+    assert main(["diff", pb, pa, "--fail-over-pct", "25"]) == 0
+
+
+def test_diff_gate_fails_on_throughput_drop(tmp_path):
+    pa = _artifact(tmp_path, "a.json", tok_s=100.0)
+    pb = _artifact(tmp_path, "b.json", tok_s=60.0)  # -40% < -25%
+    assert main(["diff", pa, pb, "--fail-over-pct", "25"]) == EXIT_REGRESSION
+    assert main(["diff", pb, pa, "--fail-over-pct", "25"]) == 0
+
+
+def test_diff_gate_ignores_counters_and_small_changes(tmp_path):
+    pa = _artifact(tmp_path, "a.json", prefill_ms=2.0, explore=4)
+    pb = _artifact(tmp_path, "b.json", prefill_ms=2.2, explore=40)  # +10%; counter x10
+    assert main(["diff", pa, pb, "--fail-over-pct", "25"]) == 0
+
+
+def _session_file(tmp_path, name, dur_s):
+    evs = [Event(0.0, "spawn", "request", "A", 1),
+           Event(dur_s, "exit", "request", "A", 1)]
+    sess = Session(meta={"schema": SESSION_SCHEMA, "git_sha": "x",
+                         "created_unix": 0}, events=evs)
+    return sess.save(str(tmp_path / name))
+
+
+def test_diff_gate_on_sessions(tmp_path):
+    pa = _session_file(tmp_path, "a.json", 0.010)
+    pb = _session_file(tmp_path, "b.json", 0.020)  # +100% latency
+    assert main(["diff", pa, pb, "--fail-over-pct", "25"]) == EXIT_REGRESSION
+    assert main(["diff", pb, pa, "--fail-over-pct", "25"]) == 0
+    assert main(["diff", pa, pa, "--fail-over-pct", "25"]) == 0
+    # without the flag the same diff is informational only
+    assert main(["diff", pa, pb]) == 0
+
+
+def test_diff_gate_json_carries_regressions(tmp_path, capsys):
+    pa = _artifact(tmp_path, "a.json", prefill_ms=2.0)
+    pb = _artifact(tmp_path, "b.json", prefill_ms=4.0)
+    assert main(["diff", pa, pb, "--json", "--fail-over-pct", "25"]) == EXIT_REGRESSION
+    captured = capsys.readouterr()
+    doc = json.loads(captured.out)
+    assert doc["regressions"] and doc["regressions"][0]["kind"] == "latency"
+
+
+def test_diff_gate_json_stdout_is_pure_json(tmp_path, capsys):
+    """Gate chatter (including the OK line) must go to stderr: with --json,
+    stdout is exactly one machine-parseable document."""
+    pa = _artifact(tmp_path, "a.json")
+    assert main(["diff", pa, pa, "--json", "--fail-over-pct", "25"]) == 0
+    captured = capsys.readouterr()
+    doc = json.loads(captured.out)  # raises on trailing chatter
+    assert doc["regressions"] == []
+    assert "regression gate" in captured.err
+
+
+# ---------------------------------------------------------------------------
+# Supervisor integration: checkpoint-aligned rotation
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_rotates_stream_at_checkpoints(tmp_path, key):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.runtime.supervisor import Supervisor, SupervisorConfig
+    from repro.training.step import TrainConfig, init_train_state, make_train_step
+
+    cfg = reduced(get_config("smollm-360m"))
+    tcfg = TrainConfig()
+    state = init_train_state(cfg, tcfg, key)
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 32, 4, seed=5))
+
+    def batch_fn(i):
+        return {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+
+    d = str(tmp_path / "trace")
+    col = TraceCollector()
+    stream = StreamingSession(d, rotate_events=10_000).attach(col)
+    sup = Supervisor(
+        SupervisorConfig(ckpt_dir=str(tmp_path / "ckpt"), ckpt_every=3, max_steps=7),
+        step, batch_fn, state, log=col, stream=stream,
+    )
+    sup.run()
+    # checkpoints at steps 3 and 6 plus the final checkpoint each force a
+    # rotation, so closed segments exist even far under the rotation budget
+    closed = [n for n in os.listdir(d) if n.startswith("segment-") and n.endswith(".jsonl")]
+    assert len(closed) >= 3
+    stream.close(stats=col.stats())
+    rep = load_stream(d).report()
+    assert any(k.startswith("step/") for k in rep["latency"])
+    assert any(k.startswith("checkpoint/") for k in rep["latency"])

@@ -130,6 +130,48 @@ def test_collector_stress_multithreaded():
     col.stats()
 
 
+def test_reserved_track_ring_survives_request_flood():
+    """Track-aware sampling: tiny dispatch events must not be evicted by a
+    flood of hot events sharing the main ring."""
+    col = TraceCollector(capacity=32, track_capacity={"dispatch": 8})
+    for i in range(4):
+        col.record("dispatch", "op", {"op": "op", "backend": "ref", "i": i})
+    for i in range(500):
+        col.record("mark", "m", i)  # "other" flood wraps the main ring 15x
+    assert len(col.events(kind="dispatch")) == 4  # all survive
+    st = col.stats()
+    assert st["dropped"] == 500 - 32
+    assert st["dropped_by_track"]["dispatch"] == 0
+    assert st["track_capacity"]["dispatch"] == 8
+    assert len(col) == 32 + 4
+
+
+def test_reserved_track_ring_eviction_is_counted():
+    col = TraceCollector(capacity=32, track_capacity={"dispatch": 2})
+    for i in range(5):
+        col.record("dispatch", "op", {"i": i})
+    evs = col.events(kind="dispatch")
+    assert [e.payload["i"] for e in evs] == [3, 4]  # newest kept
+    assert col.stats()["dropped_by_track"]["dispatch"] == 3
+    assert col.dropped == 3
+
+
+def test_default_reserved_tracks_dispatch_and_checkpoint():
+    col = TraceCollector(capacity=4)  # tiny main ring, default reservations
+    for i in range(20):
+        col.record("mark", "m", i)
+    col.record("dispatch", "op", {"op": "op"})
+    with col.lifecycle("checkpoint", 1):
+        pass
+    for i in range(20):
+        col.record("mark", "m", 100 + i)  # second flood after the events
+    assert len(col.events(kind="dispatch")) == 1
+    assert len(col.events(name="checkpoint")) == 2
+    # clear() resets reserved rings and their drop counters too
+    col.clear()
+    assert len(col) == 0 and col.dropped == 0
+
+
 def test_resolve_spans_drops_orphan_exits():
     evs = [
         Event(1.0, "exit", "request", "evicted-spawn"),
@@ -389,6 +431,100 @@ def test_load_profile_stores_merges_multiple(tmp_path):
         paths.append(p)
     merged = load_profile_stores(paths)
     assert merged.entry("op", "be", "<s>").count == 2
+
+
+def test_profile_stamp_round_trips_json():
+    store = ProfileStore()
+    store.set_stamp(git_sha="deadbee", chip="tpu-v99")
+    store.record("op", "be", "<s>", 0.001)
+    restored = ProfileStore.from_json(store.to_json())
+    e = restored.entry("op", "be", "<s>")
+    assert e.git_sha == "deadbee" and e.chip == "tpu-v99"
+
+
+def test_age_out_evicts_mismatched_keeps_matching_and_unstamped():
+    store = ProfileStore()
+    store.set_stamp(git_sha="aaaa", chip="tpu-v5e")
+    store.record("stale_op", "be", "<s>", 0.001)
+    store.set_stamp(git_sha="bbbb", chip="tpu-v5e")
+    store.record("fresh_op", "be", "<s>", 0.001)
+    store.set_stamp()  # unstamped legacy entry
+    store.record("legacy_op", "be", "<s>", 0.001)
+    aged = store.age_out(git_sha="bbbb", chip="tpu-v5e")
+    assert [a["key"] for a in aged] == ["stale_op|be|<s>"]
+    assert "git_sha changed (aaaa -> bbbb)" in aged[0]["reason"]
+    assert store.entry("fresh_op", "be", "<s>") is not None
+    assert store.entry("legacy_op", "be", "<s>") is not None
+    # chip mismatch ages out independently of git
+    aged = store.age_out(git_sha="bbbb", chip="h100")
+    assert [a["key"] for a in aged] == ["fresh_op|be|<s>"]
+    assert "chip changed" in aged[0]["reason"]
+
+
+def test_aged_out_profiles_force_re_exploration(tmp_path):
+    """The invalidation loop end to end: a warm store stamped by different
+    code is aged out at load, and the dispatcher explores again."""
+    from repro.trace import age_out_profiles, load_profile_store
+
+    cold_log = TraceCollector()
+    cold = _cheap_dispatcher(cold_log)  # warm store, stamped with current env
+    path = Session.capture(cold_log, dispatcher=cold).save(str(tmp_path / "s.json"))
+
+    # same code: nothing ages out, warm start skips exploration
+    same = load_profile_store(path)
+    assert age_out_profiles(same, chip_name=cold.chip.name) == []
+    assert _cheap_dispatcher_with_store(same).summary()["explore_dispatches"] == 0
+
+    # "the repo moved on": every entry is stamped with a foreign SHA
+    stale = load_profile_store(path)
+    for e in stale._entries.values():
+        e.git_sha = "0000000"
+    aged = age_out_profiles(stale, chip_name=cold.chip.name)
+    assert len(aged) == 2 and len(stale) == 0  # both backends evicted
+    redisp = _cheap_dispatcher_with_store(stale)
+    assert redisp.summary()["explore_dispatches"] >= 4  # re-explores from cold
+
+
+def test_merge_mixed_provenance_is_conservatively_aged_out():
+    """Merging the same key from two environments yields an untrustworthy
+    entry: its 'mixed' stamp must never survive an invalidation pass."""
+    a, b = ProfileStore(), ProfileStore()
+    a.set_stamp(git_sha="aaaa", chip="tpu-v5e")
+    a.record("op", "be", "<s>", 0.001)
+    b.set_stamp(git_sha="bbbb", chip="tpu-v5e")
+    b.record("op", "be", "<s>", 0.002)
+    b.record("other", "be", "<s>", 0.003)  # disjoint key keeps its own stamp
+    a.merge(b)
+    assert a.entry("op", "be", "<s>").git_sha == "mixed"
+    assert a.entry("op", "be", "<s>").chip == "tpu-v5e"  # agreeing field kept
+    assert a.entry("other", "be", "<s>").git_sha == "bbbb"
+    aged = a.age_out(git_sha="bbbb", chip="tpu-v5e")
+    assert [x["key"] for x in aged] == ["op|be|<s>"]
+    assert a.entry("other", "be", "<s>") is not None
+
+
+def test_record_cannot_launder_old_samples_under_fresh_stamp():
+    """One new sample into an entry of different/unknown provenance must not
+    re-stamp the whole (old-sample-dominated) mean as freshly measured."""
+    store = ProfileStore()
+    store.record("legacy", "be", "<s>", 0.5)  # unstamped old samples
+    store.set_stamp(git_sha="bbbb", chip="tpu-v5e")
+    store.record("legacy", "be", "<s>", 0.001)
+    assert store.entry("legacy", "be", "<s>").git_sha == "mixed"
+    assert store.age_out(git_sha="bbbb")  # evicted, not trusted
+    # whereas a consistently-stamped entry stays current
+    store.record("fresh", "be", "<s>", 0.001)
+    store.record("fresh", "be", "<s>", 0.001)
+    assert store.entry("fresh", "be", "<s>").git_sha == "bbbb"
+    assert store.age_out(git_sha="bbbb", chip="tpu-v5e") == []
+
+
+def test_dispatcher_stamps_new_measurements():
+    disp = _cheap_dispatcher(TraceCollector())
+    from repro.trace.session import git_sha
+
+    e = disp.store.entry("inc", "fast", "<scalar>")
+    assert e.git_sha == git_sha() and e.chip == disp.chip.name
 
 
 def test_dispatcher_keeps_provided_empty_store():
