@@ -182,6 +182,72 @@ def warmstart_workload(
     }
 
 
+def fleet_workload(fast: bool) -> dict:
+    """Workload D: central fleet aggregation warm-start (repro.fleet).
+
+    A cold run explores, then pushes its measured ProfileStore into a fleet
+    store; a second, fresh process-equivalent run pulls the matching snapshot
+    and should dispatch with zero exploration from its very first call.
+    Measured as exploration counts AND tail latency: exploration executes the
+    slow backends too, so the cold run's p95 per-dispatch latency carries the
+    worst backend while the fleet-warmed run's tail stays near the argmin.
+    """
+    import tempfile
+
+    import numpy as np
+
+    from repro.fleet import FleetClient, FleetPusher
+    from repro.trace.session import git_sha
+
+    cases = _cases(fast)
+    rounds = 2 * len(host_registry().targets()) + 3
+
+    with tempfile.TemporaryDirectory(prefix="fleet_bench_") as root:
+        client = FleetClient(root)
+
+        def run(pull: bool) -> dict:
+            log = EventLog()
+            disp = Dispatcher(DispatchConfig(policy="profiled", min_samples=2), log=log)
+            sha, chip = git_sha(), disp.chip.name
+            match = None
+            if pull:
+                pulled = client.pull(sha, chip)
+                if pulled["store"] is not None:
+                    disp.store.merge(pulled["store"])
+                match = pulled["match"]
+            pusher = FleetPusher(client, disp.store, sha, chip)
+            variants = [
+                {t.name: make(t.impl) for t in disp.registry.targets()}
+                for _, make, _ in cases
+            ]
+            lat = []
+            for _ in range(rounds):
+                for (name, _, args), vs in zip(cases, variants):
+                    disp.dispatch(name, vs, *args)
+                    lat.append(disp.decisions[-1].measured_s)
+            pusher.push()
+            return {
+                "explore_dispatches": disp.summary()["explore_dispatches"],
+                "pull_match": match,
+                "pushed_samples": pusher.pushed_samples,
+                "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+                "tail_p95_ms": round(float(np.percentile(lat, 95)) * 1e3, 3),
+            }
+
+        cold = run(pull=False)
+        warm = run(pull=True)
+
+    return {
+        "rounds": rounds,
+        "cold": cold,
+        "warm": warm,
+        "warm_explores_zero": warm["explore_dispatches"] == 0,
+        # advisory on shared runners: exploration executes the slow backends,
+        # so the cold tail should dominate the fleet-warmed tail
+        "warm_tail_le_cold": warm["tail_p95_ms"] <= cold["tail_p95_ms"] * 1.25,
+    }
+
+
 def serving_workload(fast: bool) -> dict:
     """Workload B: engine wall-time under each placement policy."""
     cfg = reduced(get_config("qwen2-0.5b"))
@@ -264,7 +330,19 @@ def run(
         f"choice={c['warm_first_choice']}\n"
         f"warm start skips exploration: {c['warm_skips_exploration']}"
     )
-    return {"kernel": a, "serving": b, "warm_start": c}
+
+    print("\n-- workload D: fleet aggregation warm start (repro.fleet) --")
+    d = fleet_workload(fast)
+    print(
+        f"exploration dispatches: cold={d['cold']['explore_dispatches']} "
+        f"fleet-warm={d['warm']['explore_dispatches']} "
+        f"(pull match: {d['warm']['pull_match']})\n"
+        f"per-dispatch latency: cold p50={d['cold']['p50_ms']}ms "
+        f"p95={d['cold']['tail_p95_ms']}ms | warm p50={d['warm']['p50_ms']}ms "
+        f"p95={d['warm']['tail_p95_ms']}ms\n"
+        f"fleet warm start skips exploration: {d['warm_explores_zero']}"
+    )
+    return {"kernel": a, "serving": b, "warm_start": c, "fleet": d}
 
 
 def main() -> None:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 from typing import Any, Optional
 
 from repro.core.events import EventLog
@@ -88,6 +89,11 @@ class ProfileStore:
     def __init__(self, min_samples: int = 2) -> None:
         self.min_samples = min_samples
         self._entries: dict[str, ProfileEntry] = {}
+        # guards mutation vs serialisation: ProfileEntry.add() updates
+        # count/mean/m2 in several steps, and a snapshot taken mid-add (e.g.
+        # a fleet push on the streaming-rotation thread while the dispatcher
+        # records) would serialise a torn Welford state
+        self._lock = threading.RLock()
         # provenance applied to entries as they receive samples; set via
         # set_stamp() (the Dispatcher stamps with its chip + the repo SHA)
         self._stamp_git = ""
@@ -110,15 +116,16 @@ class ProfileStore:
         callers can log why warm-start data disappeared.
         """
         aged: list[dict[str, str]] = []
-        for key, e in list(self._entries.items()):
-            reason = None
-            if git_sha and e.git_sha and e.git_sha != git_sha:
-                reason = f"git_sha changed ({e.git_sha} -> {git_sha})"
-            elif chip and e.chip and e.chip != chip:
-                reason = f"chip changed ({e.chip} -> {chip})"
-            if reason is not None:
-                del self._entries[key]
-                aged.append({"key": key, "reason": reason})
+        with self._lock:
+            for key, e in list(self._entries.items()):
+                reason = None
+                if git_sha and e.git_sha and e.git_sha != git_sha:
+                    reason = f"git_sha changed ({e.git_sha} -> {git_sha})"
+                elif chip and e.chip and e.chip != chip:
+                    reason = f"chip changed ({e.chip} -> {chip})"
+                if reason is not None:
+                    del self._entries[key]
+                    aged.append({"key": key, "reason": reason})
         return aged
 
     # -- writers -------------------------------------------------------------
@@ -137,21 +144,27 @@ class ProfileStore:
             e = self._entries[key] = ProfileEntry(
                 git_sha=self._stamp_git, chip=self._stamp_chip
             )
+        elif e.count == 0:
+            # a sample-less placeholder has no provenance to defend: adopt
+            # the writer's stamp instead of laundering it to 'mixed'
+            e.git_sha, e.chip = self._stamp_git, self._stamp_chip
         else:
             e.git_sha = _combine_stamp(e.git_sha, self._stamp_git)
             e.chip = _combine_stamp(e.chip, self._stamp_chip)
         return e
 
     def record(self, op: str, backend: str, sig: str, seconds: float) -> None:
-        self._entry_for_write(profile_key(op, backend, sig)).add(seconds)
+        with self._lock:
+            self._entry_for_write(profile_key(op, backend, sig)).add(seconds)
 
     def observe_timing(self, op: str, backend: str, sig: str, stats: TimingStats) -> None:
         """Fold a hyperfine benchmark result in as ``stats.runs`` samples."""
-        e = self._entry_for_write(profile_key(op, backend, sig))
-        mean_s = stats.mean_ms / 1e3
-        for _ in range(max(stats.runs, 1)):
-            e.add(mean_s)
-        e.min_s = min(e.min_s, stats.min_ms / 1e3)
+        with self._lock:
+            e = self._entry_for_write(profile_key(op, backend, sig))
+            mean_s = stats.mean_ms / 1e3
+            for _ in range(max(stats.runs, 1)):
+                e.add(mean_s)
+            e.min_s = min(e.min_s, stats.min_ms / 1e3)
 
     def ingest_event_log(self, log: EventLog) -> int:
         """Replay ``dispatch`` events (payload dicts) from a previous run."""
@@ -204,27 +217,72 @@ class ProfileStore:
         Entries merged from *different* environments get a ``"mixed"`` stamp:
         it never matches a real SHA/chip, so :meth:`age_out` conservatively
         evicts them — samples of unknown provenance must not survive an
-        invalidation pass.  Returns the number of keys touched.
+        invalidation pass.  ``count == 0`` placeholder rows in ``other`` are
+        skipped outright: they carry no samples, and materialising them here
+        would create warm-looking empty entries (inflating ``profiled_keys``
+        and polluting stamps).  Returns the number of samples merged.
         """
 
-        for k, o in other._entries.items():
-            e = self._entries.get(k)
-            if e is None:
-                self._entries[k] = ProfileEntry(
-                    o.count, o.mean_s, o.m2, o.min_s, o.git_sha, o.chip
+        merged = 0
+        with self._lock:
+            for k, o in list(other._entries.items()):
+                if o.count == 0:  # placeholder row: no samples to fold in
+                    continue
+                e = self._entries.get(k)
+                if e is None or e.count == 0:
+                    # absent or a sample-less placeholder: take the incoming
+                    # entry wholesale — combining stamps with a placeholder
+                    # would launder real provenance to 'mixed' and get the
+                    # samples evicted by the next age-out pass
+                    self._entries[k] = ProfileEntry(
+                        o.count, o.mean_s, o.m2, o.min_s, o.git_sha, o.chip
+                    )
+                    merged += o.count
+                    continue
+                n = e.count + o.count
+                delta = o.mean_s - e.mean_s
+                e.m2 = e.m2 + o.m2 + delta * delta * e.count * o.count / n
+                e.mean_s = e.mean_s + delta * o.count / n
+                e.count = n
+                e.min_s = min(e.min_s, o.min_s)
+                e.git_sha = _combine_stamp(e.git_sha, o.git_sha)
+                e.chip = _combine_stamp(e.chip, o.chip)
+                merged += o.count
+        return merged
+
+    def delta_since(self, baseline: "ProfileStore") -> "ProfileStore":
+        """Samples added to this store since ``baseline`` (an earlier
+        snapshot of the *same* store).
+
+        Welford states subtract exactly as they merge: for every key the
+        returned store holds a state D such that ``baseline.merge(D)``
+        reproduces this store's count/mean/m2.  ``min_s`` is carried whole —
+        min-merging is idempotent, so re-pushing it is harmless.  Keys with
+        no new samples are omitted.  This is what lets a long-lived run push
+        per-rotation snapshots to a fleet store without double-counting the
+        samples it already pushed.
+        """
+        out = ProfileStore(min_samples=self.min_samples)
+        with self._lock:
+            for k, e in list(self._entries.items()):
+                if e.count == 0:  # placeholder row: nothing to push
+                    continue
+                b = baseline._entries.get(k)
+                if b is None or b.count == 0:
+                    out._entries[k] = ProfileEntry(
+                        e.count, e.mean_s, e.m2, e.min_s, e.git_sha, e.chip
+                    )
+                    continue
+                n = e.count - b.count
+                if n <= 0:  # no new samples (counts never shrink in place)
+                    continue
+                mean = (e.count * e.mean_s - b.count * b.mean_s) / n
+                delta = mean - b.mean_s
+                m2 = e.m2 - b.m2 - delta * delta * b.count * n / e.count
+                out._entries[k] = ProfileEntry(
+                    n, mean, max(m2, 0.0), e.min_s, e.git_sha, e.chip
                 )
-                continue
-            n = e.count + o.count
-            if n == 0:
-                continue
-            delta = o.mean_s - e.mean_s
-            e.m2 = e.m2 + o.m2 + delta * delta * e.count * o.count / n
-            e.mean_s = e.mean_s + delta * o.count / n
-            e.count = n
-            e.min_s = min(e.min_s, o.min_s)
-            e.git_sha = _combine_stamp(e.git_sha, o.git_sha)
-            e.chip = _combine_stamp(e.chip, o.chip)
-        return len(other._entries)
+        return out
 
     # -- persistence ---------------------------------------------------------
 
@@ -238,16 +296,17 @@ class ProfileStore:
                 d["chip"] = e.chip
             return d
 
-        # list() snapshots the dict in one GIL-atomic step: a concurrent
-        # record() inserting a new key (e.g. streaming rotation on another
-        # thread serialising mid-run) must not break iteration
-        return json.dumps(
-            {
-                "min_samples": self.min_samples,
-                "entries": {k: row(e) for k, e in list(self._entries.items())},
-            },
-            indent=1,
-        )
+        # under the store lock: a concurrent record() (streaming rotation on
+        # another thread serialising mid-run) must neither break iteration
+        # nor expose a mid-add torn Welford state
+        with self._lock:
+            return json.dumps(
+                {
+                    "min_samples": self.min_samples,
+                    "entries": {k: row(e) for k, e in list(self._entries.items())},
+                },
+                indent=1,
+            )
 
     @classmethod
     def from_json(cls, text: str) -> "ProfileStore":

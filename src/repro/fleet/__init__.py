@@ -1,0 +1,40 @@
+"""repro.fleet — central cross-run profile aggregation with auto warm-start.
+
+Closes the analyze→aggregate→dispatch loop *across processes*: every run's
+measured :class:`~repro.dispatch.profiles.ProfileStore` is Welford-merged
+into a central store keyed by (git SHA, chip), and any later run on matching
+code + hardware warm-starts from the freshest fleet profile instead of
+re-exploring (the Adaptyst cross-run aggregation the ROADMAP called for).
+
+* :mod:`repro.fleet.store` — :class:`FleetStore`, the on-disk bucket store
+  (Welford merge on push, exact → chip-only → miss pull fallback,
+  staleness/retention gc, ``"mixed"`` provenance never shadows a real match);
+* :mod:`repro.fleet.service` — stdlib ``http.server`` daemon over one store;
+* :mod:`repro.fleet.client` — :class:`FleetClient` (HTTP or direct-path
+  transport) and :class:`FleetPusher` (delta pushes that never double-count);
+* :mod:`repro.fleet.cli` — ``python -m repro.fleet {serve,push,pull,ls,gc}``.
+
+Drivers wire it end-to-end via ``--fleet <url|dir>`` on ``launch.serve`` /
+``launch.train``: pull + age-out at startup, per-rotation pushes while
+streaming (``--trace-dir``), and a final delta push at shutdown.
+"""
+from repro.fleet.client import (
+    FleetClient,
+    FleetError,
+    FleetPusher,
+    warm_start_from_fleet,
+)
+from repro.fleet.service import FleetServer, make_server
+from repro.fleet.store import FLEET_SCHEMA, FleetStore, declared_stamp
+
+__all__ = [
+    "FLEET_SCHEMA",
+    "FleetClient",
+    "FleetError",
+    "FleetPusher",
+    "FleetServer",
+    "FleetStore",
+    "declared_stamp",
+    "make_server",
+    "warm_start_from_fleet",
+]

@@ -1,0 +1,9 @@
+import sys
+
+from repro.fleet.cli import main
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:  # e.g. `... | head`: not an error
+        sys.exit(0)

@@ -1,0 +1,153 @@
+"""Fleet profile daemon: a stdlib ``http.server`` front end over FleetStore.
+
+No third-party dependencies — a ``ThreadingHTTPServer`` speaking a small
+JSON protocol (one route per :class:`~repro.fleet.store.FleetStore` verb):
+
+    GET  /healthz                          liveness + bucket count
+    GET  /v1/ls                            bucket metadata listing
+    GET  /v1/pull?git_sha=S&chip=C         best match (exact → chip → miss)
+    POST /v1/push   {git_sha, chip, store} Welford-merge a snapshot in
+    POST /v1/gc     {max_age_s, keep_per_chip}
+
+Run it with ``python -m repro.fleet serve --root DIR``; talk to it with
+:class:`~repro.fleet.client.FleetClient` (which also speaks directly to a
+store directory for single-host use — same verbs, no daemon).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import urllib.parse
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Optional
+
+from repro.dispatch.profiles import ProfileStore
+from repro.fleet.store import FleetStore
+
+MAX_PUSH_BYTES = 64 << 20  # a merged ProfileStore is KBs; 64 MiB is generous
+
+
+class FleetServer(ThreadingHTTPServer):
+    """HTTP server owning one FleetStore (threaded: pushes serialize on the
+    store's lock, reads are cheap)."""
+
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, addr: tuple[str, int], fleet: FleetStore,
+                 quiet: bool = True) -> None:
+        self.fleet = fleet
+        self.quiet = quiet
+        super().__init__(addr, _Handler)
+
+    @property
+    def url(self) -> str:
+        host, port = self.server_address[:2]
+        if host in ("0.0.0.0", "::"):  # wildcard binds aren't connectable —
+            # give scripts/--ready-file consumers a reachable name
+            import socket
+
+            host = socket.getfqdn() or socket.gethostname()
+        return f"http://{host}:{port}"
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server_version = "repro-fleet/1"
+    server: FleetServer  # narrowed for the route handlers
+
+    # -- plumbing -------------------------------------------------------------
+
+    def log_message(self, fmt: str, *args: Any) -> None:
+        if not self.server.quiet:
+            sys.stderr.write("fleet: " + (fmt % args) + "\n")
+
+    def _send(self, code: int, doc: dict[str, Any]) -> None:
+        body = json.dumps(doc, indent=1).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _error(self, code: int, message: str) -> None:
+        self._send(code, {"error": message})
+
+    def _body(self) -> Optional[dict[str, Any]]:
+        try:
+            n = int(self.headers.get("Content-Length", "0"))
+        except ValueError:
+            n = 0
+        if n <= 0 or n > MAX_PUSH_BYTES:
+            self._error(400, f"body required (≤ {MAX_PUSH_BYTES} bytes)")
+            return None
+        try:
+            doc = json.loads(self.rfile.read(n))
+        except json.JSONDecodeError as exc:
+            self._error(400, f"invalid JSON body: {exc}")
+            return None
+        if not isinstance(doc, dict):
+            self._error(400, "body must be a JSON object")
+            return None
+        return doc
+
+    # -- routes ---------------------------------------------------------------
+
+    def do_GET(self) -> None:  # noqa: N802 (http.server API)
+        url = urllib.parse.urlsplit(self.path)
+        q = urllib.parse.parse_qs(url.query)
+        try:
+            if url.path == "/healthz":
+                self._send(200, {"ok": True, "schema": "repro.fleet/v1",
+                                 "snapshots": len(self.server.fleet)})
+            elif url.path == "/v1/ls":
+                self._send(200, {"snapshots": self.server.fleet.ls()})
+            elif url.path == "/v1/pull":
+                git_sha = (q.get("git_sha") or [""])[0]
+                chip = (q.get("chip") or [""])[0]
+                if not git_sha or not chip:
+                    self._error(400, "pull requires git_sha= and chip= params")
+                    return
+                self._send(200, self.server.fleet.pull(git_sha, chip))
+            else:
+                self._error(404, f"unknown path {url.path}")
+        except Exception as exc:  # surface the failure to the client, not a 500 page
+            self._error(500, f"{type(exc).__name__}: {exc}")
+
+    def do_POST(self) -> None:  # noqa: N802
+        url = urllib.parse.urlsplit(self.path)
+        body = self._body()
+        if body is None:
+            return
+        try:
+            if url.path == "/v1/push":
+                git_sha = body.get("git_sha", "")
+                chip = body.get("chip", "")
+                raw = body.get("store")
+                if not isinstance(raw, dict) or "entries" not in raw:
+                    self._error(400, "push body needs a 'store' ProfileStore object")
+                    return
+                store = ProfileStore.from_json(json.dumps(raw))
+                self._send(200, self.server.fleet.push(
+                    store, git_sha, chip,
+                    source=body.get("source"), seq=body.get("seq")))
+            elif url.path == "/v1/gc":
+                removed = self.server.fleet.gc(
+                    max_age_s=body.get("max_age_s"),
+                    keep_per_chip=body.get("keep_per_chip"),
+                )
+                self._send(200, {"removed": removed})
+            else:
+                self._error(404, f"unknown path {url.path}")
+        except (ValueError, KeyError, TypeError) as exc:
+            self._error(400, f"{type(exc).__name__}: {exc}")
+        except Exception as exc:
+            self._error(500, f"{type(exc).__name__}: {exc}")
+
+
+def make_server(root: str, host: str = "127.0.0.1", port: int = 8377,
+                quiet: bool = True) -> FleetServer:
+    """Bind a fleet daemon (``port=0`` picks a free port; see ``.url``)."""
+    import os
+
+    os.makedirs(root, exist_ok=True)  # the daemon's root is explicit intent
+    return FleetServer((host, port), FleetStore(root), quiet=quiet)

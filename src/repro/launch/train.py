@@ -84,6 +84,13 @@ def main() -> None:
                          "`python -m repro.trace compact DIR`)")
     ap.add_argument("--trace-rotate", type=int, default=2048, metavar="N",
                     help="events per streaming segment before rotation+fsync")
+    ap.add_argument("--trace-rotate-keep", type=int, default=None, metavar="N",
+                    help="segment retention: delete the oldest closed segments "
+                         "past N so --trace-dir stays bounded on long runs")
+    ap.add_argument("--fleet", default=None, metavar="URL|DIR",
+                    help="central profile service (repro.fleet): pull matching "
+                         "profiles at startup, push measured deltas at "
+                         "shutdown and every streaming rotation")
     ap.add_argument("--trace-capacity", type=int, default=65536,
                     help="trace ring-buffer capacity (events); evictions are counted")
     ap.add_argument("--profile-in", action="append", default=None, metavar="PATH",
@@ -92,6 +99,9 @@ def main() -> None:
     ap.add_argument("--profile-out", default=None, metavar="PATH",
                     help="write the measured ProfileStore for the next run")
     args = ap.parse_args()
+    if args.fleet and args.dispatch == "off":
+        # a fleet-less run would silently neither warm-start nor push
+        ap.error("--fleet requires --dispatch (static|roofline|profiled)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -142,6 +152,16 @@ def main() -> None:
                 )
                 for t in dispatcher.registry.targets()
             }
+        fleet_rec = pusher = None
+        run_meta = {"driver": "train", "arch": cfg.name, "mesh": args.mesh,
+                    "steps": args.steps}
+        if args.fleet and dispatcher is not None:
+            from repro.fleet import warm_start_from_fleet
+
+            fleet_rec, pusher = warm_start_from_fleet(args.fleet, dispatcher)
+            # recorded in session/manifest metadata: push-profiles refuses to
+            # re-push artifacts of runs that already fed a fleet live
+            run_meta["fleet"] = args.fleet
 
         data = SyntheticLM(
             DataConfig(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
@@ -159,9 +179,10 @@ def main() -> None:
             stream = StreamingSession(
                 args.trace_dir,
                 rotate_events=args.trace_rotate,
-                meta={"driver": "train", "arch": cfg.name, "mesh": args.mesh,
-                      "steps": args.steps},
+                max_segments=args.trace_rotate_keep,
+                meta=run_meta,
                 store_provider=(lambda: dispatcher.store) if dispatcher is not None else None,
+                fleet_push=pusher.push if pusher is not None else None,
             ).attach(log)
         fail_at = tuple(int(s) for s in args.fail_at.split(",") if s)
         sup = Supervisor(
@@ -206,16 +227,24 @@ def main() -> None:
     rec["trace"] = log.stats()
     if stream is not None:
         rec["trace_dir"] = stream.close(stats=log.stats())
+    if pusher is not None:
+        final = pusher.push()  # remaining delta (no-op if a rotation covered it)
+        fleet_rec["push"] = {"pushed_samples": pusher.pushed_samples}
+        if "error" in final:
+            fleet_rec["push"]["error"] = final["error"]
+    if fleet_rec is not None:
+        rec["fleet"] = fleet_rec
     if args.trace_out:
-        sess = Session.capture(
-            log, dispatcher=dispatcher,
-            meta={"driver": "train", "arch": cfg.name, "mesh": args.mesh,
-                  "steps": args.steps},
-        )
+        sess = Session.capture(log, dispatcher=dispatcher, meta=run_meta)
         rec["trace_out"] = sess.save(args.trace_out)
     if args.profile_out and dispatcher is not None:
+        doc = json.loads(dispatcher.store.to_json())
+        if args.fleet:
+            # marks the artifact as already fed to a fleet live, so
+            # push-profiles refuses to double-count it later
+            doc["fleet"] = args.fleet
         with open(args.profile_out, "w") as f:
-            f.write(dispatcher.store.to_json())
+            json.dump(doc, f, indent=1)
         rec["profile_out"] = args.profile_out
     print(json.dumps(rec))
 

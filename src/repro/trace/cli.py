@@ -4,6 +4,8 @@
   PYTHONPATH=src python -m repro.trace export  t.json --format chrome -o t.chrome.json
   PYTHONPATH=src python -m repro.trace diff    a.json b.json [--fail-over-pct 25]
   PYTHONPATH=src python -m repro.trace compact run_dir/ -o session.json
+  PYTHONPATH=src python -m repro.trace tail    run_dir/ [--once]
+  PYTHONPATH=src python -m repro.trace push-profiles run_dir/ --fleet http://host:8377
 
 ``report`` prints per-op / per-backend latency tables for one session;
 ``export`` renders it for a standard viewer (Perfetto / speedscope /
@@ -13,6 +15,11 @@ artifacts (``benchmarks/out_all.json``) — across runs / PRs, and with
 threshold (the CI gate); ``compact`` folds a streaming segment directory
 (``--trace-dir``) back into the one-file session format.  ``report``,
 ``export`` and ``diff`` also accept segment directories directly.
+
+``tail`` follows a live ``--trace-dir`` like ``tail -f`` (one line per event
+with track + duration; ``--once`` drains and exits); ``push-profiles``
+backfills the fleet profile service (:mod:`repro.fleet`) from a recorded
+session or segment directory.
 """
 from __future__ import annotations
 
@@ -32,7 +39,7 @@ from repro.trace.session import (
     is_session,
     session_regressions,
 )
-from repro.trace.stream import load_any, load_stream
+from repro.trace.stream import load_any, load_stream, tail_stream
 
 EXIT_REGRESSION = 3  # distinct from argparse (2) and generic failure (1)
 
@@ -99,6 +106,29 @@ def cmd_compact(args: argparse.Namespace) -> int:
           f"segments -> {path} ({len(sess.events)} events"
           + (f", {stream['skipped_lines']} torn lines skipped"
              if stream["skipped_lines"] else "") + ")")
+    return 0
+
+
+def cmd_tail(args: argparse.Namespace) -> int:
+    try:
+        return tail_stream(args.dir, once=args.once, poll_s=args.poll)
+    except FileNotFoundError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 1
+
+
+def cmd_push_profiles(args: argparse.Namespace) -> int:
+    """Backfill the fleet store from a recorded session / segment directory."""
+    from repro.fleet.cli import PUSH_RESULT_KEYS, push_source
+    from repro.fleet.client import FleetError
+
+    try:
+        res = push_source(args.session, args.fleet, args.git_sha, args.chip,
+                          force=args.force)
+    except (FleetError, ValueError, FileNotFoundError) as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 1
+    print(json.dumps({k: res.get(k) for k in PUSH_RESULT_KEYS}))
     return 0
 
 
@@ -199,6 +229,28 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("dir", help="directory written by --trace-dir")
     p.add_argument("-o", "--out", default="session.json", help="output session path")
     p.set_defaults(fn=cmd_compact)
+
+    p = sub.add_parser("tail", help="follow a live --trace-dir like tail -f")
+    p.add_argument("dir", help="directory written by --trace-dir")
+    p.add_argument("--once", action="store_true",
+                   help="drain what exists now and exit (tests/scripting)")
+    p.add_argument("--poll", type=float, default=0.2, metavar="SECONDS",
+                   help="poll interval while following")
+    p.set_defaults(fn=cmd_tail)
+
+    p = sub.add_parser("push-profiles",
+                       help="backfill the fleet profile service from a recorded run")
+    p.add_argument("session", help="session JSON or streaming segment directory")
+    p.add_argument("--fleet", required=True, metavar="URL|DIR",
+                   help="fleet daemon URL (http://host:port) or store directory")
+    p.add_argument("--git-sha", default=None,
+                   help="bucket key override (default: the session's own SHA)")
+    p.add_argument("--chip", default=None,
+                   help="bucket key override (default: the session's own chip)")
+    p.add_argument("--force", action="store_true",
+                   help="push even if the run already fed this fleet live "
+                        "(accepts the double count)")
+    p.set_defaults(fn=cmd_push_profiles)
 
     p = sub.add_parser("diff", help="compare two sessions (or two bench artifacts)")
     p.add_argument("a", help="session JSON, segment directory, or bench artifact")

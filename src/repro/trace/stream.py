@@ -35,6 +35,7 @@ from typing import Any, Callable, Optional
 from repro.core.events import Event
 from repro.dispatch.profiles import ProfileStore
 from repro.trace.session import SESSION_SCHEMA, Session, run_metadata
+from repro.utils.io import atomic_write as _atomic_write
 
 STREAM_SCHEMA = "repro.trace.stream/v1"
 MANIFEST_NAME = "MANIFEST.json"
@@ -44,16 +45,6 @@ OPEN_SUFFIX = ".open"
 
 DEFAULT_ROTATE_EVENTS = 2048
 DEFAULT_ROTATE_BYTES = 4 << 20  # 4 MiB
-
-
-def _atomic_write(path: str, text: str) -> None:
-    """Write-then-rename with fsync: readers never see a torn file."""
-    tmp = f"{path}.tmp"
-    with open(tmp, "w") as f:
-        f.write(text)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
 
 
 class StreamingSession:
@@ -70,6 +61,20 @@ class StreamingSession:
     ``store_provider`` (a zero-arg callable returning a ProfileStore) makes
     each rotation also persist the measured profiles, so a crashed run keeps
     its warm-start data up to the last closed segment.
+
+    ``max_segments=N`` bounds the directory on long-lived servers: after each
+    rotation the oldest closed segments beyond N are deleted (the manifest
+    counts them in ``pruned_segments``/``pruned_events``; recovery tolerates
+    the resulting gaps in segment numbering).
+
+    ``fleet_push`` (a zero-arg callable, typically
+    :meth:`repro.fleet.client.FleetPusher.push`) is invoked best-effort at
+    every rotation, so a long-lived server continuously feeds the central
+    fleet profile store instead of only at shutdown.  Rotation-time pushes
+    run on a background thread — a slow or unreachable fleet must not stall
+    the traced (and locked) event path; a push still in flight makes the next
+    rotation skip (deltas ride the following push).  ``close()`` pushes
+    synchronously so shutdown never loses the final delta.
     """
 
     def __init__(
@@ -78,16 +83,22 @@ class StreamingSession:
         *,
         rotate_events: int = DEFAULT_ROTATE_EVENTS,
         rotate_bytes: int = DEFAULT_ROTATE_BYTES,
+        max_segments: Optional[int] = None,
         meta: Optional[dict[str, Any]] = None,
         chip: Optional[dict[str, Any]] = None,
         store_provider: Optional[Callable[[], ProfileStore]] = None,
+        fleet_push: Optional[Callable[[], Any]] = None,
     ) -> None:
         if rotate_events < 1:
             raise ValueError(f"rotate_events must be >= 1, got {rotate_events}")
+        if max_segments is not None and max_segments < 1:
+            raise ValueError(f"max_segments must be >= 1, got {max_segments}")
         self.path = path
         self.rotate_events = rotate_events
         self.rotate_bytes = rotate_bytes
+        self.max_segments = max_segments
         self.store_provider = store_provider
+        self.fleet_push = fleet_push
         if chip is None:
             from repro.hw.specs import default_chip
 
@@ -98,10 +109,14 @@ class StreamingSession:
             "chip": chip,
             "rotate_events": rotate_events,
             "rotate_bytes": rotate_bytes,
+            "max_segments": max_segments,
             "segments": [],
+            "pruned_segments": 0,
+            "pruned_events": 0,
             "closed": False,
         }
         self._lock = threading.Lock()
+        self._fleet_thread: Optional[threading.Thread] = None
         self._seg_index = 0
         self._seg_events = 0
         self._seg_bytes = 0
@@ -168,8 +183,61 @@ class StreamingSession:
             {"name": name, "events": self._seg_events, "bytes": self._seg_bytes}
         )
         self._seg_index += 1
+        self._prune_locked()
         self._snapshot_profiles_locked()
         self._write_manifest()
+        self._fleet_push_locked()
+
+    def _prune_locked(self) -> None:
+        """Segment retention: delete the oldest closed segments past
+        ``max_segments`` so a long-lived server's --trace-dir stays bounded.
+        The manifest records what was lost (count + events) and keeps only the
+        surviving segments in its index — recovery tolerates the numbering gap."""
+        if self.max_segments is None:
+            return
+        segments = self._manifest["segments"]
+        while len(segments) > self.max_segments:
+            victim = segments.pop(0)
+            try:
+                os.unlink(os.path.join(self.path, victim["name"]))
+            except FileNotFoundError:
+                pass
+            self._manifest["pruned_segments"] += 1
+            self._manifest["pruned_events"] += victim.get("events", 0)
+
+    def _fleet_push_locked(self, sync: bool = False) -> None:
+        """Feed the fleet profile store at each rotation (best effort): an
+        unreachable fleet must not abort — or stall — the traced run, so
+        rotation pushes run on a background thread (FleetPusher keeps its
+        baseline on failure and is itself thread-safe, so a skipped or failed
+        push just means those samples ride the next one).  ``sync=True``
+        (close) joins any in-flight push and then pushes inline, so the final
+        delta is durable before the process exits."""
+        if self.fleet_push is None:
+            return
+
+        def run() -> None:
+            try:
+                self.fleet_push()
+            except Exception as exc:
+                import sys
+
+                print(f"trace stream: fleet push failed ({type(exc).__name__}: "
+                      f"{exc}); segments unaffected", file=sys.stderr)
+
+        prev = self._fleet_thread
+        if sync:
+            # the push thread never takes the stream lock, so joining here
+            # (under it) cannot deadlock
+            if prev is not None and prev.is_alive():
+                prev.join()
+            run()
+            return
+        if prev is not None and prev.is_alive():
+            return  # still pushing the previous delta; this one rides along
+        self._fleet_thread = threading.Thread(
+            target=run, name="trace-fleet-push", daemon=True)
+        self._fleet_thread.start()
 
     def _snapshot_profiles_locked(self) -> None:
         """Persist the current ProfileStore next to the segments (best
@@ -228,8 +296,9 @@ class StreamingSession:
                 self._seg_file = None
                 os.unlink(os.path.join(self.path, name))
             # final profile snapshot: samples recorded since the last
-            # rotation must survive the run
+            # rotation must survive the run (and reach the fleet)
             self._snapshot_profiles_locked()
+            self._fleet_push_locked(sync=True)
             self._manifest["closed"] = True
             self._manifest["total_events"] = self._total_events
             if stats is not None:
@@ -323,6 +392,8 @@ def load_stream(path: str) -> Session:
         "open_segments": len(open_segs),
         "salvaged_events": salvaged,
         "skipped_lines": skipped,
+        "pruned_segments": manifest.get("pruned_segments", 0),
+        "pruned_events": manifest.get("pruned_events", 0),
     }
     collector_stats = manifest.get("collector") or {}
     return Session(
@@ -341,3 +412,151 @@ def load_any(path: str) -> Session:
     if os.path.isdir(path):
         return load_stream(path)
     return Session.load(path)
+
+
+# -- live tailing -------------------------------------------------------------
+
+
+def _seg_indices(path: str) -> list[int]:
+    out = set()
+    for p in glob.glob(os.path.join(path, f"{SEGMENT_PREFIX}*.jsonl*")):
+        digits = os.path.basename(p)[len(SEGMENT_PREFIX):].split(".", 1)[0]
+        if digits.isdigit():
+            out.add(int(digits))
+    return sorted(out)
+
+
+def _render_event(row: dict[str, Any], open_spans: dict[Any, float]) -> str:
+    """One human line per event: track, kind, name, and a duration on exit."""
+    from repro.trace.collector import TRACK_OF
+
+    t = row.get("t", 0.0)
+    kind = str(row.get("kind", "?"))
+    name = str(row.get("name", "?"))
+    track = "dispatch" if kind == "dispatch" else TRACK_OF.get(name, "other")
+    key = ("span", row["span"]) if row.get("span") else ("name", name)
+    extra = ""
+    if kind == "spawn":
+        open_spans[key] = t
+    elif kind == "exit":
+        t0 = open_spans.pop(key, None)
+        if t0 is not None:
+            extra = f"dur={1e3 * (t - t0):.3f}ms"
+    elif kind == "dispatch" and isinstance(row.get("payload"), dict):
+        p = row["payload"]
+        extra = f"{p.get('backend')} ({p.get('source')})"
+        if isinstance(p.get("measured_s"), (int, float)):
+            extra += f" dur={1e3 * p['measured_s']:.3f}ms"
+    return f"{t:14.6f}  {track:<10} {kind:<8} {name:<18} {extra}".rstrip()
+
+
+class _Tailer:
+    """Incremental reader over a live segment directory.
+
+    Tracks (segment index, byte offset); a segment is drained from its
+    ``.open`` file and finished when its closed (renamed) form exists — the
+    rename preserves content, so the offset carries over.  Pruned/missing
+    indices are skipped (retention deletes the oldest closed segments)."""
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+        indices = _seg_indices(path)
+        self.index = indices[0] if indices else 0
+        self.offset = 0
+        self.open_spans: dict[Any, float] = {}
+
+    def _paths(self, index: int) -> tuple[str, str]:
+        name = os.path.join(self.path, f"{SEGMENT_PREFIX}{index:06d}.jsonl")
+        return name, name + OPEN_SUFFIX
+
+    def poll(self) -> list[str]:
+        """Render every complete line that appeared since the last poll."""
+        out: list[str] = []
+        while True:
+            closed, open_ = self._paths(self.index)
+            is_closed = os.path.exists(closed)
+            target = closed if is_closed else open_
+            if not os.path.exists(target):
+                indices = _seg_indices(self.path)
+                if self.index in indices:
+                    # raced a rotation rename between the closed/open exists
+                    # checks: the segment is still there, just under its
+                    # other name — re-evaluate, this is not a gap
+                    continue
+                later = [i for i in indices if i > self.index]
+                if later:  # pruned or skipped index: jump the gap, visibly —
+                    # a silent skip would read as "those events never happened"
+                    out.append(
+                        f"# gap: segments {self.index:06d}..{later[0] - 1:06d} "
+                        "pruned by retention"
+                        + (" (partially shown)" if self.offset else "")
+                    )
+                    self.index, self.offset = later[0], 0
+                    continue
+                return out
+            try:
+                with open(target) as f:
+                    f.seek(self.offset)
+                    chunk = f.read()
+            except FileNotFoundError:
+                # raced a rotation rename (or retention unlink) between the
+                # exists() check and the open: re-evaluate from the top
+                continue
+            # only complete lines; a torn tail stays buffered in the file
+            end = chunk.rfind("\n") + 1
+            for line in chunk[:end].splitlines():
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    row = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # torn line mid-segment (crash remnant)
+                out.append(_render_event(row, self.open_spans))
+            self.offset += end
+            if is_closed:  # fully drained and sealed: move on
+                self.index += 1
+                self.offset = 0
+            else:
+                return out
+
+    def stream_closed(self) -> bool:
+        try:
+            with open(os.path.join(self.path, MANIFEST_NAME)) as f:
+                return bool(json.load(f).get("closed"))
+        except (FileNotFoundError, json.JSONDecodeError):
+            return False
+
+
+def tail_stream(path: str, *, once: bool = False, poll_s: float = 0.2,
+                out: Any = None) -> int:
+    """Follow a ``--trace-dir`` like ``tail -f`` (one rendered line/event).
+
+    Re-stats on rotation (the open segment's rename to its closed form is
+    detected and the offset carried over), skips pruned segment indices, and
+    returns once the manifest reports the session closed and every line has
+    been printed.  ``once=True`` drains what exists now and returns (tests,
+    scripting).  Ctrl-C returns 0.
+    """
+    import sys
+    import time as _time
+
+    out = sys.stdout if out is None else out
+    if not is_stream_dir(path):
+        raise FileNotFoundError(f"{path} is not a streaming trace session")
+    tailer = _Tailer(path)
+    try:
+        while True:
+            for line in tailer.poll():
+                print(line, file=out)
+            out.flush()
+            if once or tailer.stream_closed():
+                # one final drain: lines written between poll and the closed
+                # manifest must not be lost
+                for line in tailer.poll():
+                    print(line, file=out)
+                out.flush()
+                return 0
+            _time.sleep(poll_s)
+    except KeyboardInterrupt:
+        return 0

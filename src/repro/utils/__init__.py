@@ -1,3 +1,4 @@
+from repro.utils.io import atomic_write
 from repro.utils.tree import (
     assert_no_nans,
     tree_cast,
@@ -10,6 +11,7 @@ from repro.utils.tree import (
 
 __all__ = [
     "assert_no_nans",
+    "atomic_write",
     "tree_cast",
     "tree_flatten_with_paths",
     "tree_map_with_path",

@@ -1,0 +1,677 @@
+"""repro.fleet: central cross-run profile aggregation + auto warm-start."""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.dispatch.profiles import ProfileEntry, ProfileStore
+from repro.fleet import (
+    FleetClient,
+    FleetError,
+    FleetPusher,
+    FleetStore,
+    declared_stamp,
+    make_server,
+    warm_start_from_fleet,
+)
+from repro.fleet.cli import EXIT_MISS
+from repro.fleet.cli import main as fleet_main
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _store(samples, op="op", backend="be", sig="<s>", git_sha="", chip=""):
+    s = ProfileStore()
+    if git_sha or chip:
+        s.set_stamp(git_sha=git_sha, chip=chip)
+    for x in samples:
+        s.record(op, backend, sig, x)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# ProfileStore: merge placeholder fix + delta subtraction
+# ---------------------------------------------------------------------------
+
+
+def test_merge_returns_sample_count_and_skips_placeholders():
+    a, b = ProfileStore(), ProfileStore()
+    b._entries["op|be|<s>"] = ProfileEntry()  # count=0 placeholder row
+    b.record("op2", "be", "<s>", 0.001)
+    b.record("op2", "be", "<s>", 0.002)
+    assert a.merge(b) == 2  # samples merged, not keys touched
+    # the empty row must not materialise as a warm-looking zero-sample entry
+    assert len(a) == 1 and a.entry("op", "be", "<s>") is None
+
+
+def test_merge_placeholder_does_not_pollute_existing_stamp():
+    a = _store([0.001], git_sha="aaaa", chip="tpu-x")
+    b = ProfileStore()
+    b._entries["op|be|<s>"] = ProfileEntry()  # unstamped empty row, same key
+    assert a.merge(b) == 0
+    e = a.entry("op", "be", "<s>")
+    assert e.count == 1
+    assert e.git_sha == "aaaa" and e.chip == "tpu-x"  # no 'mixed' laundering
+
+
+def test_merge_into_placeholder_adopts_incoming_stamp():
+    """A sample-less placeholder in *self* must not launder the incoming
+    entry's provenance to 'mixed' (age-out would then evict real samples)."""
+    a = ProfileStore()
+    a._entries["op|be|<s>"] = ProfileEntry()  # unstamped count=0 row
+    b = _store([0.001, 0.002], git_sha="aaaa", chip="tpu-x")
+    assert a.merge(b) == 2
+    e = a.entry("op", "be", "<s>")
+    assert e.count == 2 and e.git_sha == "aaaa" and e.chip == "tpu-x"
+    assert a.age_out(git_sha="aaaa", chip="tpu-x") == []  # survives
+
+
+def test_record_into_placeholder_adopts_writer_stamp():
+    s = ProfileStore()
+    s._entries["op|be|<s>"] = ProfileEntry()  # unstamped count=0 row
+    s.set_stamp(git_sha="aaaa", chip="tpu-x")
+    s.record("op", "be", "<s>", 0.001)
+    e = s.entry("op", "be", "<s>")
+    assert e.git_sha == "aaaa" and e.chip == "tpu-x"  # not 'mixed'
+
+
+def test_delta_since_is_exact_welford_complement():
+    s = ProfileStore()
+    first, second = [0.5, 1.0, 2.0], [4.0, 0.25, 8.0]
+    for x in first:
+        s.record("op", "be", "<s>", x)
+    base = ProfileStore.from_json(s.to_json())
+    for x in second:
+        s.record("op", "be", "<s>", x)
+    s.record("new", "be", "<s>", 1.0)
+
+    delta = s.delta_since(base)
+    e = delta.entry("op", "be", "<s>")
+    assert e.count == len(second)
+    assert e.mean_s == pytest.approx(sum(second) / len(second))
+    assert delta.entry("new", "be", "<s>").count == 1  # new key ships whole
+    assert len(s.delta_since(s)) == 0  # no new samples -> empty delta
+
+    # pushing base + delta must equal the full store (no double counting)
+    base.merge(delta)
+    full, merged = s.entry("op", "be", "<s>"), base.entry("op", "be", "<s>")
+    assert merged.count == full.count
+    assert merged.mean_s == pytest.approx(full.mean_s)
+    assert merged.m2 == pytest.approx(full.m2)
+    assert merged.min_s == full.min_s
+
+
+# ---------------------------------------------------------------------------
+# FleetStore: push merge, pull fallback ordering, gc retention
+# ---------------------------------------------------------------------------
+
+
+def test_push_welford_merges_into_bucket(tmp_path):
+    fs = FleetStore(str(tmp_path))
+    r1 = fs.push(_store([0.001, 0.003]), "sha1", "chipA")
+    r2 = fs.push(_store([0.002]), "sha1", "chipA")
+    assert (r1["merged_samples"], r2["merged_samples"]) == (2, 1)
+    assert r2["samples"] == 3 and r2["pushes"] == 2
+    pulled = fs.pull("sha1", "chipA")
+    store = ProfileStore.from_json(json.dumps(pulled["store"]))
+    e = store.entry("op", "be", "<s>")
+    assert e.count == 3 and e.min_s == 0.001
+    assert e.mean_s == pytest.approx(0.002)
+
+
+def test_push_requires_key(tmp_path):
+    fs = FleetStore(str(tmp_path))
+    with pytest.raises(ValueError):
+        fs.push(_store([0.001]), "", "chipA")
+
+
+def test_push_stamps_unstamped_entries_with_bucket_key(tmp_path):
+    """Unstamped samples adopt the declared bucket provenance on push, so a
+    later chip-only fallback pull can age them out instead of trusting them
+    across code changes."""
+    fs = FleetStore(str(tmp_path))
+    fs.push(_store([0.001]), "sha1", "chipA")  # _store default: no stamps
+    pulled = fs.pull("other_sha", "chipA")  # chip fallback
+    store = ProfileStore.from_json(json.dumps(pulled["store"]))
+    e = store.entry("op", "be", "<s>")
+    assert e.git_sha == "sha1" and e.chip == "chipA"
+    aged = store.age_out(git_sha="other_sha", chip="chipA")
+    assert len(aged) == 1  # evictable, not silently trusted
+
+
+def test_push_dedups_on_source_and_seq(tmp_path):
+    """Re-sending an already-recorded (source, seq) must not merge twice —
+    the retry protocol for pushes whose response was lost."""
+    fs = FleetStore(str(tmp_path))
+    r1 = fs.push(_store([0.001, 0.002]), "sha1", "chipA", source="run-a", seq=1)
+    r2 = fs.push(_store([0.001, 0.002]), "sha1", "chipA", source="run-a", seq=1)
+    assert r1["merged_samples"] == 2 and "duplicate" not in r1
+    assert r2["merged_samples"] == 0 and r2["duplicate"] is True
+    assert fs.pull("sha1", "chipA")["samples"] == 2
+    # a new seq (and other sources) merge normally
+    assert fs.push(_store([0.003]), "sha1", "chipA",
+                   source="run-a", seq=2)["merged_samples"] == 1
+    assert fs.push(_store([0.004]), "sha1", "chipA",
+                   source="run-b", seq=1)["merged_samples"] == 1
+
+
+def test_read_verbs_do_not_create_a_store(tmp_path):
+    """A mistyped --fleet path must surface, not mint an empty store: ls/gc
+    error, pull reports a plain miss (cold-start bootstrap), and only a push
+    creates the root."""
+    root = str(tmp_path / "typo")
+    fs = FleetStore(root)
+    assert fs.pull("sha1", "chipA")["match"] == "miss"
+    with pytest.raises(ValueError, match="does not exist"):
+        fs.ls()
+    with pytest.raises(ValueError, match="does not exist"):
+        fs.gc(keep_per_chip=1)
+    assert not os.path.exists(root)
+    fs.push(_store([0.001]), "sha1", "chipA")
+    assert os.path.isdir(root) and fs.ls()
+
+
+def test_pull_fallback_exact_then_chip_then_miss(tmp_path):
+    fs = FleetStore(str(tmp_path))
+    fs.push(_store([0.001]), "old_sha", "chipA")
+    time.sleep(0.01)
+    fs.push(_store([0.002]), "new_sha", "chipA")
+    fs.push(_store([0.003]), "new_sha", "chipB")
+
+    # exact beats a fresher same-chip bucket
+    assert fs.pull("old_sha", "chipA")["match"] == "exact"
+    assert fs.pull("old_sha", "chipA")["git_sha"] == "old_sha"
+    # unknown sha: freshest same-chip bucket
+    chip = fs.pull("unknown", "chipA")
+    assert chip["match"] == "chip" and chip["git_sha"] == "new_sha"
+    # unknown chip: miss, store is None
+    miss = fs.pull("unknown", "chipZ")
+    assert miss["match"] == "miss" and miss["store"] is None
+
+
+def test_mixed_provenance_never_shadows_real_buckets(tmp_path):
+    fs = FleetStore(str(tmp_path))
+    fs.push(_store([0.001]), "sha1", "chipA")
+    time.sleep(0.01)
+    fs.push(_store([0.002]), "mixed", "chipA")  # fresher, unknown provenance
+    chip = fs.pull("unknown", "chipA")
+    assert chip["match"] == "chip" and chip["git_sha"] == "sha1"
+    # a fleet holding ONLY mixed buckets yields a miss, not mixed samples
+    fs2 = FleetStore(str(tmp_path / "only_mixed"))
+    fs2.push(_store([0.001]), "mixed", "chipA")
+    assert fs2.pull("unknown", "chipA")["match"] == "miss"
+
+
+def test_gc_age_and_per_chip_retention(tmp_path):
+    fs = FleetStore(str(tmp_path))
+    fs.push(_store([0.001]), "s1", "chipA")
+    time.sleep(0.01)
+    fs.push(_store([0.002]), "s2", "chipA")
+    time.sleep(0.01)
+    fs.push(_store([0.003]), "s3", "chipA")
+    fs.push(_store([0.004]), "s4", "chipB")
+    assert len(fs) == 4
+
+    # staleness: everything is "old" relative to a far-future now except
+    # nothing — inject now to make only s1 stale
+    t1 = [r for r in fs.ls() if r["git_sha"] == "s1"][0]["pushed_unix"]
+    removed = fs.gc(max_age_s=0.005, now=t1 + 0.006)
+    assert [r["git_sha"] for r in removed] == ["s1"]
+
+    # retention: keep the newest bucket per chip
+    removed = fs.gc(keep_per_chip=1)
+    assert sorted(r["git_sha"] for r in removed) == ["s2"]
+    assert sorted(r["git_sha"] for r in fs.ls()) == ["s3", "s4"]
+
+
+def test_slug_collision_safe_keys(tmp_path):
+    """Keys that sanitise identically must land in distinct buckets."""
+    fs = FleetStore(str(tmp_path))
+    fs.push(_store([0.001]), "sha/1", "chip A")
+    fs.push(_store([0.002]), "sha?1", "chip\tA")
+    assert len(fs) == 2
+    assert fs.pull("sha/1", "chip A")["match"] == "exact"
+    assert fs.pull("sha?1", "chip\tA")["match"] == "exact"
+
+
+def test_declared_stamp_unanimous_or_empty():
+    unanimous = _store([0.001, 0.002], git_sha="aaaa", chip="tpu-x")
+    assert declared_stamp(unanimous) == ("aaaa", "tpu-x")
+    disagreeing = _store([0.001], git_sha="aaaa", chip="tpu-x")
+    disagreeing.set_stamp(git_sha="bbbb", chip="tpu-x")
+    disagreeing.record("op2", "be", "<s>", 0.002)
+    assert declared_stamp(disagreeing) == ("", "tpu-x")
+    # a unanimous 'mixed' stamp is unknown provenance, not agreement
+    laundered = _store([0.001], git_sha="mixed", chip="mixed")
+    assert declared_stamp(laundered) == ("", "")
+
+
+# ---------------------------------------------------------------------------
+# HTTP daemon + FleetClient (both transports)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def fleet_server(tmp_path):
+    server = make_server(str(tmp_path / "fleet_root"), port=0)
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        yield server
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+def test_http_round_trip(fleet_server):
+    client = FleetClient(fleet_server.url)
+    assert client.health()["ok"] is True
+    res = client.push(_store([0.001, 0.002]), "sha1", "chipA")
+    assert res["merged_samples"] == 2
+    pulled = client.pull("sha1", "chipA")
+    assert pulled["match"] == "exact"
+    assert pulled["store"].entry("op", "be", "<s>").count == 2
+    assert client.ls()[0]["git_sha"] == "sha1"
+    assert [r["git_sha"] for r in client.gc(keep_per_chip=0)] == ["sha1"]
+    assert client.ls() == []
+
+
+def test_http_error_paths(fleet_server):
+    client = FleetClient(fleet_server.url)
+    with pytest.raises(FleetError, match="400"):
+        client.push(_store([0.001]), "", "chipA")  # empty key
+    with pytest.raises(FleetError, match="unreachable"):
+        FleetClient("http://127.0.0.1:9", timeout=0.5).ls()  # discard port
+
+
+def test_file_and_http_transports_share_format(fleet_server, tmp_path):
+    """A bucket pushed over HTTP is pullable via direct file mode (the
+    daemon is an optional front end over the same on-disk store)."""
+    FleetClient(fleet_server.url).push(_store([0.001]), "sha1", "chipA")
+    direct = FleetClient(str(fleet_server.fleet.root))
+    assert direct.pull("sha1", "chipA")["match"] == "exact"
+    file_url = FleetClient("file://" + str(fleet_server.fleet.root))
+    assert file_url.pull("sha1", "chipA")["match"] == "exact"
+
+
+def test_concurrent_http_pushes_lose_no_samples(fleet_server):
+    """The satellite stress test: concurrent overlapping pushes must
+    Welford-merge losslessly (count, mean and min all exact)."""
+    samples = [0.001, 0.002, 0.003, 0.004, 0.005]
+    workers, pushes = 4, 6
+
+    def worker():
+        client = FleetClient(fleet_server.url)
+        for _ in range(pushes):
+            client.push(_store(samples), "sha1", "chipA")
+
+    threads = [threading.Thread(target=worker) for _ in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    pulled = FleetClient(fleet_server.url).pull("sha1", "chipA")
+    e = pulled["store"].entry("op", "be", "<s>")
+    assert e.count == workers * pushes * len(samples)
+    assert e.mean_s == pytest.approx(sum(samples) / len(samples))
+    assert e.min_s == min(samples)
+    assert pulled["samples"] == e.count
+
+
+def test_concurrent_direct_clients_lose_no_samples(tmp_path):
+    """Direct-path mode from independent clients (separate FleetStore
+    instances, so only the advisory flock serialises them)."""
+    root = str(tmp_path / "root")
+    samples = [0.001, 0.002]
+    workers, pushes = 4, 5
+
+    def worker():
+        client = FleetClient(root)  # own FleetStore, own threading.Lock
+        for _ in range(pushes):
+            client.push(_store(samples), "sha1", "chipA")
+
+    threads = [threading.Thread(target=worker) for _ in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    e = FleetClient(root).pull("sha1", "chipA")["store"].entry("op", "be", "<s>")
+    assert e.count == workers * pushes * len(samples)
+
+
+# ---------------------------------------------------------------------------
+# FleetPusher: delta pushes never double-count
+# ---------------------------------------------------------------------------
+
+
+def test_pusher_deltas_never_double_count(tmp_path):
+    client = FleetClient(str(tmp_path))
+    live = _store([0.004])
+    pusher = FleetPusher(client, live, "sha1", "chipA")
+    # samples present at pusher creation are the baseline (e.g. just pulled
+    # from the fleet) and must NOT be echoed back
+    assert pusher.push()["pushed"] is False
+
+    live.record("op", "be", "<s>", 0.005)
+    live.record("op2", "be", "<s>", 0.006)
+    assert pusher.push()["pushed"] is True
+    assert pusher.push()["pushed"] is False  # idempotent: no new samples
+    live.record("op", "be", "<s>", 0.007)
+    assert pusher.push()["merged_samples"] == 1
+
+    pulled = client.pull("sha1", "chipA")
+    assert pulled["store"].entry("op", "be", "<s>").count == 2  # 0.005, 0.007
+    assert pulled["store"].entry("op2", "be", "<s>").count == 1
+    assert pusher.pushed_samples == 3
+
+
+def test_pusher_retry_after_lost_response_is_exactly_once(tmp_path):
+    """A push that LANDED but whose response was lost (timeout) must not be
+    Welford-merged twice: the pusher retries the same (delta, seq) and the
+    fleet acknowledges it as a duplicate."""
+
+    class LossyClient(FleetClient):
+        def __init__(self, target):
+            super().__init__(target)
+            self.lose_next_response = False
+
+        def push(self, *a, **kw):
+            res = super().push(*a, **kw)
+            if self.lose_next_response:
+                self.lose_next_response = False
+                raise FleetError("response lost after the server applied it")
+            return res
+
+    client = LossyClient(str(tmp_path / "fleet"))
+    live = ProfileStore()
+    pusher = FleetPusher(client, live, "sha1", "chipA")
+
+    live.record("op", "be", "<s>", 0.001)
+    client.lose_next_response = True
+    res = pusher.push()
+    assert res["pushed"] is False and "error" in res  # ambiguous outcome
+
+    live.record("op", "be", "<s>", 0.002)  # recorded while delta pending
+    assert pusher.push()["pushed"] is True  # retried delta deduped server-side
+    assert pusher.push()["pushed"] is True  # then the 0.002 delta
+
+    e = FleetClient(str(tmp_path / "fleet")).pull("sha1", "chipA")["store"] \
+        .entry("op", "be", "<s>")
+    assert e.count == 2  # exactly once despite the lost response
+    assert e.mean_s == pytest.approx(0.0015)
+
+
+def test_pusher_unreachable_fleet_keeps_baseline(tmp_path):
+    live = ProfileStore()
+    pusher = FleetPusher(FleetClient("http://127.0.0.1:9", timeout=0.5),
+                         live, "sha1", "chipA")
+    live.record("op", "be", "<s>", 0.001)
+    res = pusher.push()
+    assert res["pushed"] is False and "error" in res
+    with pytest.raises(FleetError):
+        pusher.push(raise_on_error=True)
+    # a recovered fleet receives the missed samples on the next push
+    pusher.client = FleetClient(str(tmp_path))
+    assert pusher.push()["merged_samples"] == 1
+
+
+def test_file_mode_io_errors_become_fleet_errors(tmp_path):
+    """Direct-path verbs must normalise OSErrors to FleetError, so drivers
+    degrade (log / start cold / retry next rotation) instead of crashing."""
+    blocker = tmp_path / "not_a_dir"
+    blocker.write_text("occupied")  # root path collides with a regular file
+    client = FleetClient(str(blocker))
+    with pytest.raises(FleetError):
+        client.push(_store([0.001]), "sha1", "chipA")
+    # a pusher on the same target degrades best-effort instead of raising
+    live = _store([0.001])
+    pusher = FleetPusher(client, live, "sha1", "chipA")
+    live.record("op", "be", "<s>", 0.002)
+    res = pusher.push()
+    assert res["pushed"] is False and "error" in res
+
+
+# ---------------------------------------------------------------------------
+# Driver wiring (warm_start_from_fleet) + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_warm_start_pull_exact_then_stale_sha_reexplores(tmp_path):
+    from repro.dispatch import DispatchConfig, Dispatcher
+    from repro.trace.session import git_sha
+
+    root = str(tmp_path / "fleet")
+    disp = Dispatcher(DispatchConfig(policy="profiled"))
+    sha, chip = git_sha(), disp.chip.name
+
+    # empty fleet: miss, still returns a usable pusher
+    rec, pusher = warm_start_from_fleet(root, disp)
+    assert rec["pull"]["match"] == "miss"
+    disp.store.record("op", "be", "<s>", 0.001)
+    assert pusher.push()["merged_samples"] == 1
+
+    # exact match warm start: entries survive age-out
+    disp2 = Dispatcher(DispatchConfig(policy="profiled"))
+    rec2, _ = warm_start_from_fleet(root, disp2)
+    assert rec2["pull"] == {"match": "exact", "bucket_git_sha": sha,
+                            "bucket_chip": chip, "entries": 1,
+                            "merged_samples": 1, "aged_out": 0}
+    assert disp2.store.samples("op", "be", "<s>") == 1
+
+    # stale-SHA bucket: chip fallback pulls it, age-out evicts everything —
+    # the dispatcher re-explores rather than trusting stale timings
+    stale_root = str(tmp_path / "stale")
+    stale = _store([0.002], git_sha="0000000", chip=chip)
+    FleetClient(stale_root).push(stale, "0000000", chip)
+    disp3 = Dispatcher(DispatchConfig(policy="profiled"))
+    rec3, _ = warm_start_from_fleet(stale_root, disp3)
+    assert rec3["pull"]["match"] == "chip"
+    assert rec3["pull"]["aged_out"] == 1
+    assert len(disp3.store) == 0
+
+    # unreachable fleet: cold start, no crash
+    disp4 = Dispatcher(DispatchConfig(policy="profiled"))
+    rec4, pusher4 = warm_start_from_fleet("http://127.0.0.1:9", disp4)
+    assert rec4["pull"]["match"] == "error" and pusher4 is not None
+
+
+def test_stale_fleet_pull_never_destroys_valid_local_profiles(tmp_path):
+    """A chip-only fallback bucket must be age-filtered BEFORE merging:
+    merging first would degrade overlapping locally-valid entries (e.g.
+    loaded via --profile-in) to 'mixed' and the age-out would then evict the
+    driver's own good warm-start data."""
+    from repro.dispatch import DispatchConfig, Dispatcher
+    from repro.trace.session import git_sha
+
+    disp = Dispatcher(DispatchConfig(policy="profiled"))
+    sha, chip = git_sha(), disp.chip.name
+    # valid local warm-start samples, stamped with the current environment
+    for x in (0.001, 0.002, 0.003, 0.004, 0.005):
+        disp.store.record("op", "be", "<s>", x)
+
+    # fleet only holds an older-SHA same-chip bucket sharing the key
+    root = str(tmp_path / "fleet")
+    FleetClient(root).push(_store([0.9], git_sha="0000000", chip=chip),
+                           "0000000", chip)
+
+    rec, _ = warm_start_from_fleet(root, disp)
+    assert rec["pull"]["match"] == "chip"
+    assert rec["pull"]["aged_out"] == 1  # only the stale fleet entry
+    e = disp.store.entry("op", "be", "<s>")
+    assert e is not None and e.count == 5  # local samples fully intact
+    assert e.git_sha == sha  # never degraded to 'mixed'
+    assert e.min_s == 0.001  # the stale 0.9s sample never merged in
+
+
+def test_cli_push_pull_ls_gc_round_trip(tmp_path, capsys):
+    root = str(tmp_path / "fleet")
+    src = str(tmp_path / "profiles.json")
+    with open(src, "w") as f:
+        f.write(_store([0.001, 0.002], git_sha="sha1", chip="chipA").to_json())
+
+    # push derives the bucket key from the store's unanimous stamps
+    assert fleet_main(["push", src, "--fleet", root, "--json"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["git_sha"] == "sha1" and out["chip"] == "chipA"
+    assert out["merged_samples"] == 2
+
+    dst = str(tmp_path / "pulled.json")
+    assert fleet_main(["pull", "--fleet", root, "--git-sha", "sha1",
+                       "--chip", "chipA", "-o", dst]) == 0
+    restored = ProfileStore.from_json(open(dst).read())
+    assert restored.entry("op", "be", "<s>").count == 2
+
+    assert fleet_main(["pull", "--fleet", root, "--git-sha", "nope",
+                       "--chip", "nochip"]) == EXIT_MISS
+    assert "match=exact" in capsys.readouterr().out  # drain the pull chatter
+
+    assert fleet_main(["ls", "--fleet", root, "--json"]) == 0
+    rows = json.loads(capsys.readouterr().out)["snapshots"]
+    assert len(rows) == 1 and rows[0]["samples"] == 2
+
+    assert fleet_main(["gc", "--fleet", root, "--keep-per-chip", "0",
+                       "--json"]) == 0
+    assert json.loads(capsys.readouterr().out)["removed"]
+    assert fleet_main(["ls", "--fleet", root, "--json"]) == 0
+    assert json.loads(capsys.readouterr().out)["snapshots"] == []
+
+
+def test_cli_push_refuses_ambiguous_provenance(tmp_path, capsys):
+    """Foreign/unstamped samples must not be silently keyed to the current
+    environment (they would become a trusted exact-match warm start)."""
+    src = str(tmp_path / "unstamped.json")
+    with open(src, "w") as f:
+        f.write(_store([0.001]).to_json())  # no stamps at all
+    root = str(tmp_path / "fleet")
+    assert fleet_main(["push", src, "--fleet", root]) == 1
+    assert "provenance" in capsys.readouterr().err
+    # explicit flags resolve the ambiguity
+    assert fleet_main(["push", src, "--fleet", root,
+                       "--git-sha", "sha1", "--chip", "chipA"]) == 0
+    assert FleetClient(root).pull("sha1", "chipA")["match"] == "exact"
+
+
+def test_push_profiles_refuses_fleet_connected_run_without_force(tmp_path, capsys):
+    """An artifact of a run that already fed a fleet live (delta pushes)
+    must not be re-pushed wholesale — that would double-count every sample."""
+    from repro.trace import StreamingSession, TraceCollector
+    from repro.trace.cli import main as trace_main
+
+    store = _store([0.001, 0.002], git_sha="sha1", chip="chipA")
+    root = str(tmp_path / "fleet")
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    stream = StreamingSession(d, meta={"fleet": root},
+                              store_provider=lambda: store).attach(col)
+    col.record("mark", "m", 0)
+    stream.close(stats=col.stats())
+
+    assert trace_main(["push-profiles", d, "--fleet", root]) == 1
+    assert "double-count" in capsys.readouterr().err
+    assert trace_main(["push-profiles", d, "--fleet", root, "--force",
+                       "--git-sha", "sha1", "--chip", "chipA"]) == 0
+    assert FleetClient(root).pull("sha1", "chipA")["match"] == "exact"
+    # a DIFFERENT fleet never received the live deltas: warn, don't refuse
+    other = str(tmp_path / "other_fleet")
+    assert trace_main(["push-profiles", d, "--fleet", other,
+                       "--git-sha", "sha1", "--chip", "chipA"]) == 0
+    assert "warning" in capsys.readouterr().err
+
+
+def test_cli_push_rejects_profile_free_sources(tmp_path, capsys):
+    bogus = str(tmp_path / "chrome.json")
+    with open(bogus, "w") as f:
+        json.dump({"traceEvents": []}, f)
+    assert fleet_main(["push", bogus, "--fleet", str(tmp_path / "r")]) == 1
+
+
+def test_cli_push_refuses_profile_out_of_fleet_connected_run(tmp_path, capsys):
+    """--profile-out files written by a --fleet run carry a 'fleet' marker;
+    re-pushing them wholesale is refused (the run already pushed deltas)."""
+    root = str(tmp_path / "fleet")
+    store = _store([0.001], git_sha="sha1", chip="chipA")
+    doc = json.loads(store.to_json())
+    doc["fleet"] = root  # what the drivers write
+    src = str(tmp_path / "profiles.json")
+    with open(src, "w") as f:
+        json.dump(doc, f)
+    assert fleet_main(["push", src, "--fleet", root]) == 1
+    assert "double-count" in capsys.readouterr().err
+    assert fleet_main(["push", src, "--fleet", root, "--force"]) == 0
+
+
+def test_trace_cli_push_profiles_backfills_from_stream_dir(tmp_path, capsys):
+    from repro.trace import StreamingSession, TraceCollector
+    from repro.trace.cli import main as trace_main
+
+    store = _store([0.001, 0.002], git_sha="sess_sha", chip="sess_chip")
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    stream = StreamingSession(d, store_provider=lambda: store).attach(col)
+    col.record("mark", "m", 0)
+    stream.close(stats=col.stats())
+
+    root = str(tmp_path / "fleet")
+    assert trace_main(["push-profiles", d, "--fleet", root,
+                       "--git-sha", "sess_sha", "--chip", "sess_chip"]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["merged_samples"] == 2
+    assert FleetClient(root).pull("sess_sha", "sess_chip")["match"] == "exact"
+
+
+def test_trace_cli_push_profiles_defaults_key_from_session(tmp_path, capsys):
+    """Backfilling a --trace-out session uses the session's own git SHA and
+    chip as the bucket key."""
+    from repro.core.events import EventLog
+    from repro.trace import Session
+    from repro.trace.cli import main as trace_main
+
+    log = EventLog()
+    log.record("mark", "m", 0)
+    sess = Session.capture(log, store=_store([0.001]))
+    sess.chip = {"name": "tpu_test"}
+    p = sess.save(str(tmp_path / "s.json"))
+
+    root = str(tmp_path / "fleet")
+    assert trace_main(["push-profiles", p, "--fleet", root]) == 0
+    out = json.loads(capsys.readouterr().out)
+    assert out["chip"] == "tpu_test"
+    assert out["git_sha"] == sess.meta["git_sha"]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the two-process warm-start demo (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _run_serve(fleet: str, extra=()):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen2-0.5b",
+         "--reduced", "--requests", "4", "--max-new", "6",
+         "--dispatch", "profiled", "--fleet", fleet, *extra],
+        env=env, cwd=REPO, capture_output=True, text=True, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout)
+
+
+def test_two_process_fleet_warm_start(tmp_path):
+    """Run 1 (cold) explores and pushes; run 2 pulls an exact match and
+    reports zero exploration dispatches in its driver JSON."""
+    fleet = str(tmp_path / "fleet_store")
+    r1 = _run_serve(fleet)
+    assert r1["fleet"]["pull"]["match"] == "miss"
+    assert r1["dispatch"]["explore_dispatches"] > 0
+    assert r1["fleet"]["push"]["pushed_samples"] > 0
+
+    r2 = _run_serve(fleet)
+    assert r2["fleet"]["pull"]["match"] == "exact"
+    assert r2["dispatch"]["explore_dispatches"] == 0

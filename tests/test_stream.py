@@ -4,6 +4,7 @@ import os
 import signal
 import subprocess
 import sys
+import threading
 import time
 
 import pytest
@@ -219,6 +220,172 @@ def test_serve_sigkill_mid_run_recovers(tmp_path):
     assert len(sess.events) >= sum(s["events"] for s in manifest["segments"])
     assert main(["report", out]) == 0
     assert main(["report", d]) == 0  # report directly on the remnants too
+
+
+# ---------------------------------------------------------------------------
+# Segment retention (max_segments / --trace-rotate-keep)
+# ---------------------------------------------------------------------------
+
+
+def test_retention_bounds_closed_segments(tmp_path):
+    d = str(tmp_path / "run")
+    col = TraceCollector(capacity=256)
+    stream = StreamingSession(d, rotate_events=4, max_segments=2).attach(col)
+    for i in range(30):
+        with col.lifecycle("request", i):
+            pass
+    stream.close(stats=col.stats())
+
+    segs = sorted(n for n in os.listdir(d)
+                  if n.startswith("segment-") and n.endswith(".jsonl"))
+    assert len(segs) == 2  # bounded, and the *newest* two survive
+    manifest = json.load(open(os.path.join(d, MANIFEST_NAME)))
+    assert [s["name"] for s in manifest["segments"]] == segs
+    assert manifest["pruned_segments"] > 0
+    assert manifest["pruned_events"] == 60 - sum(s["events"] for s in manifest["segments"])
+    assert manifest["max_segments"] == 2
+
+    # recovery tolerates the numbering gap left by pruning
+    sess = load_stream(d)
+    assert len(sess.events) == sum(s["events"] for s in manifest["segments"])
+    assert sess.meta["stream"]["pruned_segments"] == manifest["pruned_segments"]
+    assert main(["compact", d, "-o", str(tmp_path / "out.json")]) == 0
+
+
+def test_retention_rejects_bad_value(tmp_path):
+    with pytest.raises(ValueError, match="max_segments"):
+        StreamingSession(str(tmp_path / "x"), max_segments=0)
+
+
+# ---------------------------------------------------------------------------
+# Live tailing (python -m repro.trace tail)
+# ---------------------------------------------------------------------------
+
+
+def test_tail_once_renders_tracks_and_durations(tmp_path, capsys):
+    d = _closed_stream_dir(tmp_path, "run", n=3)
+    assert main(["tail", d, "--once"]) == 0
+    lines = [l for l in capsys.readouterr().out.splitlines() if l]
+    assert len(lines) == 6  # one line per event (3 spawn/exit pairs)
+    assert all("request" in l for l in lines)
+    exits = [l for l in lines if " exit " in l]
+    assert len(exits) == 3 and all("dur=" in l and "ms" in l for l in exits)
+
+
+def test_tail_follows_rotation_until_close(tmp_path):
+    """The follower must pick up events across rotations (open -> renamed
+    closed -> next open) and terminate when the manifest closes."""
+    import io
+
+    from repro.trace.stream import tail_stream
+
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    stream = StreamingSession(d, rotate_events=3).attach(col)
+    col.record("mark", "m", 0)
+
+    buf = io.StringIO()
+    t = threading.Thread(target=tail_stream, args=(d,),
+                         kwargs={"poll_s": 0.02, "out": buf}, daemon=True)
+    t.start()
+    for i in range(1, 10):
+        col.record("mark", "m", i)
+        time.sleep(0.01)
+    stream.close(stats=col.stats())
+    t.join(timeout=30)
+    assert not t.is_alive()
+    lines = [l for l in buf.getvalue().splitlines() if l]
+    assert len(lines) == 10  # every event exactly once, across 4 segments
+
+
+def test_tail_rejects_non_stream_dir(tmp_path):
+    assert main(["tail", str(tmp_path / "missing"), "--once"]) == 1
+
+
+def test_tail_marks_retention_gaps(tmp_path, capsys):
+    """Events lost to retention pruning must appear as an explicit gap
+    marker, never as a silent skip."""
+    d = _closed_stream_dir(tmp_path, "run", n=8)  # 16 events over 4 segments
+    os.unlink(os.path.join(d, "segment-000001.jsonl"))  # simulate pruning
+    assert main(["tail", d, "--once"]) == 0
+    lines = [l for l in capsys.readouterr().out.splitlines() if l]
+    gaps = [l for l in lines if l.startswith("# gap:")]
+    assert len(gaps) == 1 and "000001" in gaps[0]
+    assert len([l for l in lines if not l.startswith("#")]) == 12  # 16 - 4 lost
+
+
+# ---------------------------------------------------------------------------
+# Fleet feeding: per-rotation pushes
+# ---------------------------------------------------------------------------
+
+
+def test_rotation_invokes_fleet_push_best_effort(tmp_path):
+    calls = {"n": 0}
+
+    def push():
+        calls["n"] += 1
+        raise OSError("fleet down")  # must never break the stream
+
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    stream = StreamingSession(d, rotate_events=2, fleet_push=push).attach(col)
+    for i in range(5):
+        col.record("mark", "m", i)
+    stream.close(stats=col.stats())
+    # rotation pushes are async (an in-flight push makes the next rotation
+    # skip), but close() always pushes synchronously — so at least one
+    # rotation push plus the closing flush are guaranteed
+    assert calls["n"] >= 2
+    assert load_stream(d).report()["events"] == 5  # stream unharmed
+
+
+def test_slow_fleet_push_does_not_stall_the_event_path(tmp_path):
+    """A hung fleet (e.g. network black hole) must not block emit(): the
+    push runs off-thread and in-flight pushes make later rotations skip."""
+    release = threading.Event()
+    calls = {"n": 0}
+
+    def hung_push():
+        calls["n"] += 1
+        release.wait(timeout=60)
+
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    stream = StreamingSession(d, rotate_events=2, fleet_push=hung_push).attach(col)
+    t0 = time.monotonic()
+    for i in range(10):  # 5 rotations' worth, while the first push hangs
+        col.record("mark", "m", i)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 5.0  # recording never waited on the hung push
+    assert calls["n"] == 1  # later rotations skipped, not queued
+    release.set()
+    stream.close(stats=col.stats())  # close joins + flushes synchronously
+    assert calls["n"] == 2
+
+
+def test_streaming_rotations_feed_fleet_without_double_count(tmp_path):
+    """A long-lived server's per-rotation pushes plus the final close must
+    land each sample in the fleet exactly once."""
+    from repro.fleet import FleetClient, FleetPusher
+
+    client = FleetClient(str(tmp_path / "fleet"))
+    store = ProfileStore()
+    pusher = FleetPusher(client, store, "sha1", "chipA")
+
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    stream = StreamingSession(d, rotate_events=2, fleet_push=pusher.push,
+                              store_provider=lambda: store).attach(col)
+    for i in range(6):
+        store.record("op", "be", "<s>", 0.001 * (i + 1))
+        col.record("mark", "m", i)
+    stream.close(stats=col.stats())
+
+    pulled = client.pull("sha1", "chipA")
+    e = pulled["store"].entry("op", "be", "<s>")
+    assert e.count == 6  # every rotation pushed only its delta
+    assert e.min_s == 0.001
+    assert pusher.pushed_samples == 6
 
 
 # ---------------------------------------------------------------------------
