@@ -19,9 +19,17 @@ Two properties mirror the kernel-side perf machinery:
   stack.  ``lifecycle()`` allocates a process-unique span id recorded on both
   bracket events; :meth:`EventLog.durations` pairs by span id, then by
   payload identity, and only falls back to stack order for legacy events.
+* **Span hierarchy** — every event carries a ``parent`` span id, defaulted
+  from a :mod:`contextvars`-based current-span stack that ``lifecycle()``
+  pushes and pops.  contextvars are per-thread and copied into asyncio
+  tasks, so concurrent serving requests nest under their own ancestors
+  instead of whichever span another thread happens to have open.  The
+  resulting parent links are what :func:`repro.trace.collector.span_tree`
+  folds into host/device timeline trees.
 """
 from __future__ import annotations
 
+import contextvars
 import dataclasses
 import itertools
 import threading
@@ -32,18 +40,47 @@ from typing import Any, Iterator, Optional
 
 _SPAN_IDS = itertools.count(1)  # process-unique span ids (0 = "no span")
 
+# The current-span stack: a tuple (immutable, so set/reset is race-free) of
+# open span ids for this thread/task.  Events default their ``parent`` to the
+# top of this stack.
+_SPAN_STACK: contextvars.ContextVar[tuple[int, ...]] = contextvars.ContextVar(
+    "repro_span_stack", default=()
+)
+
 
 def next_span_id() -> int:
     return next(_SPAN_IDS)
 
 
+def current_span() -> int:
+    """The innermost open span in this thread/task's context (0 = none)."""
+    stack = _SPAN_STACK.get()
+    return stack[-1] if stack else 0
+
+
+@contextmanager
+def span_scope(span: int) -> Iterator[int]:
+    """Make ``span`` the current parent for events recorded in this context.
+
+    Used when a span's bracket events are recorded apart from the work they
+    enclose (e.g. a serving request spawns at submit and exits ticks later,
+    but its prefill must still nest under it).
+    """
+    token = _SPAN_STACK.set(_SPAN_STACK.get() + (span,))
+    try:
+        yield span
+    finally:
+        _SPAN_STACK.reset(token)
+
+
 @dataclasses.dataclass(frozen=True)
 class Event:
     t: float  # monotonic seconds
-    kind: str  # spawn | exit | probe | mark | dispatch | straggler
+    kind: str  # spawn | exit | probe | mark | dispatch | straggler | device
     name: str  # e.g. "step", "microbatch", "request", probe target
     payload: Any = None
     span: int = 0  # pairs spawn/exit of one unit; 0 = unspanned (legacy)
+    parent: int = 0  # enclosing span id (0 = root); defaults from span_scope
 
 
 def _pair_key(e: Event) -> Optional[Any]:
@@ -81,26 +118,47 @@ class EventLog:
         with self._lock:
             return self._dropped
 
-    def record(self, kind: str, name: str, payload: Any = None, *, span: int = 0) -> None:
-        ev = Event(time.monotonic(), kind, name, payload, span)
+    def record(
+        self,
+        kind: str,
+        name: str,
+        payload: Any = None,
+        *,
+        span: int = 0,
+        parent: Optional[int] = None,
+    ) -> None:
+        if parent is None:
+            parent = current_span()
+        ev = Event(time.monotonic(), kind, name, payload, span, parent)
         with self._lock:
             if self._events.maxlen is not None and len(self._events) == self._events.maxlen:
                 self._dropped += 1
             self._events.append(ev)
 
     @contextmanager
-    def lifecycle(self, name: str, payload: Any = None) -> Iterator[int]:
+    def lifecycle(
+        self, name: str, payload: Any = None, *, parent: Optional[int] = None
+    ) -> Iterator[int]:
         """spawn/exit bracket for a step / microbatch / request.
 
         Yields the span id shared by both bracket events, so callers can
-        attach child events to the same span.
+        attach child events to the same span.  The span becomes the current
+        parent (via the contextvars stack) for anything recorded inside the
+        block, and is itself parented to the span that encloses it —
+        ``parent=`` overrides that for brackets whose causal parent is not
+        the lexically enclosing one (e.g. a checkpoint recorded after its
+        step closed).
         """
         span = next_span_id()
-        self.record("spawn", name, payload, span=span)
+        if parent is None:
+            parent = current_span()
+        self.record("spawn", name, payload, span=span, parent=parent)
+        token = _SPAN_STACK.set(_SPAN_STACK.get() + (span,))
         try:
             yield span
         finally:
-            self.record("exit", name, payload, span=span)
+            _SPAN_STACK.reset(token)
+            self.record("exit", name, payload, span=span, parent=parent)
 
     def events(self, kind: str | None = None, name: str | None = None) -> list[Event]:
         with self._lock:

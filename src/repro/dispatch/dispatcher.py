@@ -13,7 +13,9 @@ blocks to completion, feeds the wall-time back into the
 :class:`~repro.dispatch.profiles.ProfileStore`, and records a ``dispatch``
 event whose payload carries op, backend, estimate, measurement and policy —
 the paper's "performance analysis determines the dispatch platform", with a
-paper-trail.
+paper-trail.  Each dispatch event carries its own span id and inherits the
+current span context as parent, so decisions land in the span tree as
+children of the request/step that caused them.
 """
 from __future__ import annotations
 
@@ -23,7 +25,7 @@ from typing import Any, Callable, Mapping, Optional
 
 import jax
 
-from repro.core.events import GLOBAL_LOG, EventLog
+from repro.core.events import GLOBAL_LOG, EventLog, next_span_id
 from repro.core.sdfg import SDFG, Region
 from repro.dispatch.cost import CostEstimate, estimate_region
 from repro.dispatch.profiles import ProfileStore, signature
@@ -181,7 +183,9 @@ class Dispatcher:
         decision = dataclasses.replace(decision, measured_s=dt)
         self.decisions[idx] = decision
         if self.cfg.record_events:
-            self.log.record("dispatch", op, decision.payload())
+            # own span id + context parent: the decision is a span-tree node
+            # under the request/step whose span_scope is active right now
+            self.log.record("dispatch", op, decision.payload(), span=next_span_id())
         return out
 
     # -- whole-graph placement -------------------------------------------------
@@ -207,7 +211,8 @@ class Dispatcher:
             decision = self.choose(f"region:{name}", "<sdfg>", ests)
             placement[name] = decision
             if self.cfg.record_events:
-                self.log.record("dispatch", f"region:{name}", decision.payload())
+                self.log.record("dispatch", f"region:{name}", decision.payload(),
+                                span=next_span_id())
         return placement
 
     # -- reporting -------------------------------------------------------------

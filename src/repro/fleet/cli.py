@@ -86,7 +86,8 @@ PUSH_RESULT_KEYS = ("git_sha", "chip", "merged_samples", "samples",
 
 
 def push_source(source: str, fleet: str, git_sha: Optional[str] = None,
-                chip: Optional[str] = None, force: bool = False) -> dict[str, Any]:
+                chip: Optional[str] = None, force: bool = False,
+                token: Optional[str] = None) -> dict[str, Any]:
     """Load any profile artifact and push it into a fleet target (shared by
     ``repro.fleet push`` and ``repro.trace push-profiles``).
 
@@ -124,7 +125,7 @@ def push_source(source: str, fleet: str, git_sha: Optional[str] = None,
             "defaulting to the current environment would disguise foreign "
             "samples as a trusted exact match"
         )
-    return FleetClient(fleet).push(store, sha, ch)
+    return FleetClient(fleet, token=token).push(store, sha, ch)
 
 
 # -- commands -----------------------------------------------------------------
@@ -132,9 +133,10 @@ def push_source(source: str, fleet: str, git_sha: Optional[str] = None,
 
 def cmd_serve(args: argparse.Namespace) -> int:
     server = make_server(args.root, host=args.host, port=args.port,
-                         quiet=not args.verbose)
+                         quiet=not args.verbose, token=args.token)
     print(json.dumps({"fleet": server.url, "root": os.path.abspath(args.root),
-                      "pid": os.getpid()}), flush=True)
+                      "pid": os.getpid(), "auth": args.token is not None}),
+          flush=True)
     if args.ready_file:
         from repro.utils.io import atomic_write
 
@@ -150,7 +152,7 @@ def cmd_serve(args: argparse.Namespace) -> int:
 
 def cmd_push(args: argparse.Namespace) -> int:
     res = push_source(args.source, args.fleet, args.git_sha, args.chip,
-                      force=args.force)
+                      force=args.force, token=args.token)
     print(json.dumps(res if args.json else
                      {k: res.get(k) for k in PUSH_RESULT_KEYS}))
     return 0
@@ -158,7 +160,7 @@ def cmd_push(args: argparse.Namespace) -> int:
 
 def cmd_pull(args: argparse.Namespace) -> int:
     git_sha, chip = _default_key(args.git_sha, args.chip)
-    res = FleetClient(args.fleet).pull(git_sha, chip)
+    res = FleetClient(args.fleet, token=args.token).pull(git_sha, chip)
     store = res.pop("store")
     if args.json:
         print(json.dumps(res))
@@ -177,7 +179,7 @@ def cmd_pull(args: argparse.Namespace) -> int:
 
 
 def cmd_ls(args: argparse.Namespace) -> int:
-    rows = FleetClient(args.fleet).ls()
+    rows = FleetClient(args.fleet, token=args.token).ls()
     if args.json:
         print(json.dumps({"snapshots": rows}, indent=1))
         return 0
@@ -194,7 +196,7 @@ def cmd_ls(args: argparse.Namespace) -> int:
 
 
 def cmd_gc(args: argparse.Namespace) -> int:
-    removed = FleetClient(args.fleet).gc(
+    removed = FleetClient(args.fleet, token=args.token).gc(
         max_age_s=args.max_age_s, keep_per_chip=args.keep_per_chip)
     if args.json:
         print(json.dumps({"removed": removed}, indent=1))
@@ -208,6 +210,8 @@ def cmd_gc(args: argparse.Namespace) -> int:
 def _add_fleet_arg(p: argparse.ArgumentParser) -> None:
     p.add_argument("--fleet", required=True, metavar="URL|DIR",
                    help="daemon URL (http://host:port) or store directory")
+    p.add_argument("--token", default=None, metavar="TOKEN",
+                   help="bearer token for a --token-protected daemon")
 
 
 def main(argv: Optional[list[str]] = None) -> int:
@@ -221,6 +225,9 @@ def main(argv: Optional[list[str]] = None) -> int:
                    help="0 picks a free port (printed in the startup JSON)")
     p.add_argument("--ready-file", default=None, metavar="PATH",
                    help="write the bound URL here once listening (for scripts/CI)")
+    p.add_argument("--token", default=None, metavar="TOKEN",
+                   help="require 'Authorization: Bearer TOKEN' on push/gc "
+                        "(pull/ls stay open); 401s are counted in /healthz stats")
     p.add_argument("--verbose", action="store_true", help="log each request to stderr")
     p.set_defaults(fn=cmd_serve)
 

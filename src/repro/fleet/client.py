@@ -40,11 +40,19 @@ def _parse_target(target: str) -> tuple[str, str]:
 
 
 class FleetClient:
-    """Push/pull/ls/gc against an HTTP daemon or a store directory."""
+    """Push/pull/ls/gc against an HTTP daemon or a store directory.
 
-    def __init__(self, target: str, timeout: float = 10.0) -> None:
+    ``token`` is sent as ``Authorization: Bearer <token>`` on every HTTP
+    request — daemons started with ``--token`` require it on push/gc.
+    Direct (file) mode ignores it: whoever can open the store directory
+    already has write access.
+    """
+
+    def __init__(self, target: str, timeout: float = 10.0,
+                 token: Optional[str] = None) -> None:
         self.target = target
         self.timeout = timeout
+        self.token = token
         self.mode, loc = _parse_target(target)
         self._url: Optional[str] = loc if self.mode == "http" else None
         self._store: Optional[FleetStore] = (
@@ -67,9 +75,11 @@ class FleetClient:
     def _request(self, method: str, path: str,
                  body: Optional[dict[str, Any]] = None) -> dict[str, Any]:
         data = json.dumps(body).encode() if body is not None else None
+        headers = {"Content-Type": "application/json"} if data else {}
+        if self.token is not None:
+            headers["Authorization"] = f"Bearer {self.token}"
         req = urllib.request.Request(
-            f"{self._url}{path}", data=data, method=method,
-            headers={"Content-Type": "application/json"} if data else {},
+            f"{self._url}{path}", data=data, method=method, headers=headers,
         )
         try:
             with urllib.request.urlopen(req, timeout=self.timeout) as resp:
@@ -199,7 +209,9 @@ class FleetPusher:
             return {"pushed": True, **res}
 
 
-def warm_start_from_fleet(target: str, dispatcher: Any) -> tuple[dict[str, Any], FleetPusher]:
+def warm_start_from_fleet(
+    target: str, dispatcher: Any, token: Optional[str] = None
+) -> tuple[dict[str, Any], FleetPusher]:
     """Driver-side fleet wiring (the ``--fleet`` flag on serve/train).
 
     Pulls the best matching snapshot (exact (git SHA, chip) → freshest
@@ -216,7 +228,7 @@ def warm_start_from_fleet(target: str, dispatcher: Any) -> tuple[dict[str, Any],
     from repro.trace.session import age_out_profiles, git_sha
 
     sha, chip_name = git_sha(), dispatcher.chip.name
-    client = FleetClient(target)
+    client = FleetClient(target, token=token)
     rec: dict[str, Any] = {"target": target}
     try:
         pulled = client.pull(sha, chip_name)

@@ -3,7 +3,7 @@
 No third-party dependencies — a ``ThreadingHTTPServer`` speaking a small
 JSON protocol (one route per :class:`~repro.fleet.store.FleetStore` verb):
 
-    GET  /healthz                          liveness + bucket count
+    GET  /healthz                          liveness + bucket count + stats
     GET  /v1/ls                            bucket metadata listing
     GET  /v1/pull?git_sha=S&chip=C         best match (exact → chip → miss)
     POST /v1/push   {git_sha, chip, store} Welford-merge a snapshot in
@@ -12,11 +12,19 @@ JSON protocol (one route per :class:`~repro.fleet.store.FleetStore` verb):
 Run it with ``python -m repro.fleet serve --root DIR``; talk to it with
 :class:`~repro.fleet.client.FleetClient` (which also speaks directly to a
 store directory for single-host use — same verbs, no daemon).
+
+``--token T`` turns on write authentication: push and gc (the mutating
+verbs) then require ``Authorization: Bearer T``; pull/ls/healthz stay open
+— a shared fleet wants everyone warm-starting but only trusted runs feeding
+the Welford state.  Rejections are 401s, counted in the daemon's stats
+(``auth_failures`` in ``/healthz``).
 """
 from __future__ import annotations
 
+import hmac
 import json
 import sys
+import threading
 import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Optional
@@ -29,16 +37,29 @@ MAX_PUSH_BYTES = 64 << 20  # a merged ProfileStore is KBs; 64 MiB is generous
 
 class FleetServer(ThreadingHTTPServer):
     """HTTP server owning one FleetStore (threaded: pushes serialize on the
-    store's lock, reads are cheap)."""
+    store's lock, reads are cheap).  ``token`` guards the mutating verbs."""
 
     daemon_threads = True
     allow_reuse_address = True
 
     def __init__(self, addr: tuple[str, int], fleet: FleetStore,
-                 quiet: bool = True) -> None:
+                 quiet: bool = True, token: Optional[str] = None) -> None:
         self.fleet = fleet
         self.quiet = quiet
+        self.token = token
+        self._stats_lock = threading.Lock()
+        self.stats: dict[str, int] = {
+            "pushes": 0, "pulls": 0, "gcs": 0, "auth_failures": 0,
+        }
         super().__init__(addr, _Handler)
+
+    def count(self, key: str) -> None:
+        with self._stats_lock:
+            self.stats[key] = self.stats.get(key, 0) + 1
+
+    def stats_snapshot(self) -> dict[str, int]:
+        with self._stats_lock:
+            return dict(self.stats)
 
     @property
     def url(self) -> str:
@@ -90,6 +111,23 @@ class _Handler(BaseHTTPRequestHandler):
             return None
         return doc
 
+    def _authorized(self) -> bool:
+        """Bearer check for the mutating verbs (push/gc).  Open when the
+        daemon runs without --token; 401s are counted in the daemon stats."""
+        token = self.server.token
+        if token is None:
+            return True
+        header = self.headers.get("Authorization", "")
+        # compare bytes: compare_digest raises TypeError on non-ASCII str,
+        # and HTTP headers arrive latin-1 decoded
+        if hmac.compare_digest(header.encode("latin-1", "replace"),
+                               f"Bearer {token}".encode("latin-1", "replace")):
+            return True
+        self.server.count("auth_failures")
+        self._error(401, "push/gc require 'Authorization: Bearer <token>' "
+                         "(daemon started with --token)")
+        return False
+
     # -- routes ---------------------------------------------------------------
 
     def do_GET(self) -> None:  # noqa: N802 (http.server API)
@@ -98,7 +136,9 @@ class _Handler(BaseHTTPRequestHandler):
         try:
             if url.path == "/healthz":
                 self._send(200, {"ok": True, "schema": "repro.fleet/v1",
-                                 "snapshots": len(self.server.fleet)})
+                                 "snapshots": len(self.server.fleet),
+                                 "auth": self.server.token is not None,
+                                 "stats": self.server.stats_snapshot()})
             elif url.path == "/v1/ls":
                 self._send(200, {"snapshots": self.server.fleet.ls()})
             elif url.path == "/v1/pull":
@@ -107,6 +147,7 @@ class _Handler(BaseHTTPRequestHandler):
                 if not git_sha or not chip:
                     self._error(400, "pull requires git_sha= and chip= params")
                     return
+                self.server.count("pulls")
                 self._send(200, self.server.fleet.pull(git_sha, chip))
             else:
                 self._error(404, f"unknown path {url.path}")
@@ -115,6 +156,8 @@ class _Handler(BaseHTTPRequestHandler):
 
     def do_POST(self) -> None:  # noqa: N802
         url = urllib.parse.urlsplit(self.path)
+        if url.path in ("/v1/push", "/v1/gc") and not self._authorized():
+            return
         body = self._body()
         if body is None:
             return
@@ -127,10 +170,12 @@ class _Handler(BaseHTTPRequestHandler):
                     self._error(400, "push body needs a 'store' ProfileStore object")
                     return
                 store = ProfileStore.from_json(json.dumps(raw))
+                self.server.count("pushes")
                 self._send(200, self.server.fleet.push(
                     store, git_sha, chip,
                     source=body.get("source"), seq=body.get("seq")))
             elif url.path == "/v1/gc":
+                self.server.count("gcs")
                 removed = self.server.fleet.gc(
                     max_age_s=body.get("max_age_s"),
                     keep_per_chip=body.get("keep_per_chip"),
@@ -145,9 +190,12 @@ class _Handler(BaseHTTPRequestHandler):
 
 
 def make_server(root: str, host: str = "127.0.0.1", port: int = 8377,
-                quiet: bool = True) -> FleetServer:
-    """Bind a fleet daemon (``port=0`` picks a free port; see ``.url``)."""
+                quiet: bool = True, token: Optional[str] = None) -> FleetServer:
+    """Bind a fleet daemon (``port=0`` picks a free port; see ``.url``).
+
+    ``token`` requires ``Authorization: Bearer <token>`` on push/gc.
+    """
     import os
 
     os.makedirs(root, exist_ok=True)  # the daemon's root is explicit intent
-    return FleetServer((host, port), FleetStore(root), quiet=quiet)
+    return FleetServer((host, port), FleetStore(root), quiet=quiet, token=token)

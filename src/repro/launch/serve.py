@@ -72,6 +72,8 @@ def main() -> None:
                     help="central profile service (repro.fleet): pull matching "
                          "profiles at startup, push measured deltas at "
                          "shutdown and every streaming rotation")
+    ap.add_argument("--fleet-token", default=None, metavar="TOKEN",
+                    help="bearer token for a --token-protected fleet daemon")
     ap.add_argument("--trace-capacity", type=int, default=65536,
                     help="trace ring-buffer capacity (events); evictions are counted")
     ap.add_argument("--profile-in", action="append", default=None, metavar="PATH",
@@ -106,7 +108,8 @@ def main() -> None:
     if args.fleet and dispatcher is not None:
         from repro.fleet import warm_start_from_fleet
 
-        fleet_rec, pusher = warm_start_from_fleet(args.fleet, dispatcher)
+        fleet_rec, pusher = warm_start_from_fleet(args.fleet, dispatcher,
+                                                  token=args.fleet_token)
         # recorded in session/manifest metadata: push-profiles refuses to
         # re-push artifacts of runs that already fed a fleet live
         run_meta["fleet"] = args.fleet
@@ -134,10 +137,13 @@ def main() -> None:
     )
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
-    for _ in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, args.prompt_len).tolist()
-        eng.submit(prompt, max_new=args.max_new)
-    results = eng.run_to_completion()
+    # root span of the whole run: every request (and transitively every
+    # prefill/dispatch) nests under it in report --tree and the exporters
+    with log.lifecycle("serve_run", {"arch": cfg.name, "requests": args.requests}):
+        for _ in range(args.requests):
+            prompt = rng.integers(0, cfg.vocab_size, args.prompt_len).tolist()
+            eng.submit(prompt, max_new=args.max_new)
+        results = eng.run_to_completion()
     wall = time.time() - t0
     total_new = sum(len(v) for v in results.values())
     durations = log.durations("prefill")
@@ -156,9 +162,10 @@ def main() -> None:
         if args.profile_in:
             rec["profile_in"] = args.profile_in
             rec["profile_aged_out"] = len(aged)
-    rec["trace"] = log.stats()
+    trace_stats = log.stats()  # stats() resolves spans; compute once
+    rec["trace"] = trace_stats
     if stream is not None:
-        rec["trace_dir"] = stream.close(stats=log.stats())
+        rec["trace_dir"] = stream.close(stats=trace_stats)
     if pusher is not None:
         final = pusher.push()  # remaining delta (no-op if a rotation covered it)
         fleet_rec["push"] = {"pushed_samples": pusher.pushed_samples}

@@ -91,6 +91,8 @@ def main() -> None:
                     help="central profile service (repro.fleet): pull matching "
                          "profiles at startup, push measured deltas at "
                          "shutdown and every streaming rotation")
+    ap.add_argument("--fleet-token", default=None, metavar="TOKEN",
+                    help="bearer token for a --token-protected fleet daemon")
     ap.add_argument("--trace-capacity", type=int, default=65536,
                     help="trace ring-buffer capacity (events); evictions are counted")
     ap.add_argument("--profile-in", action="append", default=None, metavar="PATH",
@@ -158,7 +160,8 @@ def main() -> None:
         if args.fleet and dispatcher is not None:
             from repro.fleet import warm_start_from_fleet
 
-            fleet_rec, pusher = warm_start_from_fleet(args.fleet, dispatcher)
+            fleet_rec, pusher = warm_start_from_fleet(args.fleet, dispatcher,
+                                                      token=args.fleet_token)
             # recorded in session/manifest metadata: push-profiles refuses to
             # re-push artifacts of runs that already fed a fleet live
             run_meta["fleet"] = args.fleet
@@ -202,7 +205,10 @@ def main() -> None:
             stream=stream,
         )
         t0 = time.time()
-        out = sup.run()
+        # root span: steps (and their checkpoint/dispatch children) nest
+        # under the run in report --tree and the exporters
+        with log.lifecycle("train_run", {"arch": cfg.name, "mesh": args.mesh}):
+            out = sup.run()
         wall = time.time() - t0
 
     losses = [float(m["loss"]) for m in out["metrics"]]
@@ -224,9 +230,10 @@ def main() -> None:
         if args.profile_in:
             rec["profile_in"] = args.profile_in
             rec["profile_aged_out"] = len(aged)
-    rec["trace"] = log.stats()
+    trace_stats = log.stats()  # stats() resolves spans; compute once
+    rec["trace"] = trace_stats
     if stream is not None:
-        rec["trace_dir"] = stream.close(stats=log.stats())
+        rec["trace_dir"] = stream.close(stats=trace_stats)
     if pusher is not None:
         final = pusher.push()  # remaining delta (no-op if a rotation covered it)
         fleet_rec["push"] = {"pushed_samples": pusher.pushed_samples}

@@ -139,11 +139,13 @@ class Supervisor:
                 self.ckpt.save(0, self.state)
         while self.step < self.cfg.max_steps:
             try:
-                with self.log.lifecycle("step", self.step):
+                with self.log.lifecycle("step", self.step) as step_span:
                     self.failures.maybe_fail(self.step)
                     t0 = time.monotonic()
                     batch = self.batch_fn(self.step)
                     if self.dispatcher is not None and self.step_variants:
+                        # inside the step's span scope: the dispatch event
+                        # lands in the span tree as the step's child
                         self.state, metrics = self.dispatcher.dispatch(
                             "train_step", self.step_variants, self.state, batch,
                             sig=signature(batch),  # state pytree is fixed-shape
@@ -155,12 +157,15 @@ class Supervisor:
                 deadline = self._deadline()
                 if deadline is not None and dt > deadline:
                     self.stragglers += 1
-                    self.log.record("straggler", "step", {"step": self.step, "s": dt})
+                    # recorded after the step closed, but caused by it: the
+                    # explicit parent keeps the tree causal, not lexical
+                    self.log.record("straggler", "step", {"step": self.step, "s": dt},
+                                    parent=step_span)
                 self._durations.append(dt)
                 metrics_hist.append(jax.device_get(metrics))
                 self.step += 1
                 if self.step % self.cfg.ckpt_every == 0:
-                    with self.log.lifecycle("checkpoint", self.step):
+                    with self.log.lifecycle("checkpoint", self.step, parent=step_span):
                         self.ckpt.save(self.step, self.state)
                     if self.stream is not None:
                         self.stream.rotate()

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.events import GLOBAL_LOG, EventLog, next_span_id
+from repro.core.events import GLOBAL_LOG, EventLog, current_span, next_span_id, span_scope
 from repro.dispatch.cost import estimate_callable
 from repro.dispatch.dispatcher import Dispatcher, with_impl
 from repro.dispatch.profiles import signature
@@ -49,6 +49,7 @@ class Request:
     slot: int = -1
     done: bool = False
     span: int = 0  # trace span id shared by the request's spawn/exit events
+    parent: int = 0  # enclosing span at submit time (e.g. the driver's run span)
 
 
 class Engine:
@@ -129,11 +130,14 @@ class Engine:
     # -- client API ----------------------------------------------------------
 
     def submit(self, prompt: list[int], max_new: int = 32) -> int:
-        req = Request(next(self._rid), list(prompt), max_new, span=next_span_id())
+        req = Request(next(self._rid), list(prompt), max_new,
+                      span=next_span_id(), parent=current_span())
         self.queue.append(req)
         # span id pairs this spawn with the exit in _decode_tick even when
-        # requests interleave (exporters and durations() pair by span first)
-        self.log.record("spawn", "request", req.rid, span=req.span)
+        # requests interleave (exporters and durations() pair by span first);
+        # the parent captured at submit keeps the request under the driver's
+        # run span even though its exit lands ticks later on another path
+        self.log.record("spawn", "request", req.rid, span=req.span, parent=req.parent)
         return req.rid
 
     def run_to_completion(self) -> dict[int, list[int]]:
@@ -157,7 +161,9 @@ class Engine:
                 continue
             req = self.queue.pop(0)
             req.slot = slot
-            with self.log.lifecycle("prefill", req.rid):
+            # the prefill (and the dispatch decision it triggers) must nest
+            # under the request span, whose bracket events live elsewhere
+            with span_scope(req.span), self.log.lifecycle("prefill", req.rid):
                 tokens = jnp.asarray(req.prompt, jnp.int32)[None]
                 logits, new_caches = self._prefill(self.params, tokens)
                 self.caches = jax.tree.map(
@@ -196,7 +202,7 @@ class Engine:
             if len(r.out) >= r.max_new or hit_eos or out_of_room:
                 r.done = True
                 self.active[r.slot] = None
-                self.log.record("exit", "request", r.rid, span=r.span)
+                self.log.record("exit", "request", r.rid, span=r.span, parent=r.parent)
                 finished.append(r)
         return finished
 

@@ -13,9 +13,12 @@ The observability layer over :mod:`repro.core.events`:
 * :mod:`repro.trace.stream` — durable :class:`StreamingSession` sinks
   (rotated, fsynced JSONL segments + manifest; a crash loses at most the
   open segment) and crash recovery back into sessions;
+* :mod:`repro.trace.device` — ``jax.profiler`` dump adapter: device slices
+  aligned under their owning host spans (per-device tracks below host rows);
 * :mod:`repro.trace.cli` — ``python -m repro.trace {report,export,diff,compact}``.
 """
-from repro.trace.collector import Span, TraceCollector, resolve_spans
+from repro.trace.collector import Span, SpanNode, TraceCollector, resolve_spans, span_tree
+from repro.trace.device import align_device_slices, load_profiler_trace, merge_device_trace
 from repro.trace.export import export, to_chrome_trace, to_folded, to_speedscope
 from repro.trace.session import (
     Session,
@@ -32,8 +35,13 @@ from repro.trace.stream import StreamingSession, load_any, load_stream
 
 __all__ = [
     "Span",
+    "SpanNode",
     "TraceCollector",
+    "align_device_slices",
+    "load_profiler_trace",
+    "merge_device_trace",
     "resolve_spans",
+    "span_tree",
     "export",
     "to_chrome_trace",
     "to_folded",

@@ -7,14 +7,17 @@
   PYTHONPATH=src python -m repro.trace tail    run_dir/ [--once]
   PYTHONPATH=src python -m repro.trace push-profiles run_dir/ --fleet http://host:8377
 
-``report`` prints per-op / per-backend latency tables for one session;
-``export`` renders it for a standard viewer (Perfetto / speedscope /
-flamegraph.pl); ``diff`` compares two sessions — or two stamped benchmark
-artifacts (``benchmarks/out_all.json``) — across runs / PRs, and with
-``--fail-over-pct`` exits non-zero on latency/throughput regressions past the
-threshold (the CI gate); ``compact`` folds a streaming segment directory
-(``--trace-dir``) back into the one-file session format.  ``report``,
-``export`` and ``diff`` also accept segment directories directly.
+``report`` prints per-op / per-backend latency tables for one session —
+``--tree`` renders the span hierarchy instead (indented parent/child nodes
+with inclusive/exclusive times); ``export`` renders it for a standard viewer
+(Perfetto / speedscope / flamegraph.pl); both accept ``--device-trace DIR``
+to fold a ``jax.profiler`` dump under the host spans first (see
+:mod:`repro.trace.device`).  ``diff`` compares two sessions — or two stamped
+benchmark artifacts (``benchmarks/out_all.json``) — across runs / PRs, and
+with ``--fail-over-pct`` exits non-zero on latency/throughput regressions
+past the threshold (the CI gate); ``compact`` folds a streaming segment
+directory (``--trace-dir``) back into the one-file session format.
+``report``, ``export`` and ``diff`` also accept segment directories directly.
 
 ``tail`` follows a live ``--trace-dir`` like ``tail -f`` (one line per event
 with track + duration; ``--once`` drains and exits); ``push-profiles``
@@ -52,7 +55,9 @@ def _print_report(rep: dict[str, Any]) -> None:
     m = rep["meta"]
     print(f"session  schema={m.get('schema')}  git={m.get('git_sha')}  "
           f"created={m.get('created_unix')}")
-    print(f"events   {rep['events']}  (dropped by ring: {rep['dropped']})")
+    print(f"events   {rep['events']}  (dropped by ring: {rep['dropped']})"
+          + (f"  ({rep['truncated_spans']} truncated spans excluded)"
+             if rep.get("truncated_spans") else ""))
     if rep["latency"]:
         print(f"\n{'track/name':<28}{'count':>7}{'mean_ms':>10}{'min_ms':>10}{'max_ms':>10}")
         for key, row in sorted(rep["latency"].items()):
@@ -68,8 +73,36 @@ def _print_report(rep: dict[str, Any]) -> None:
                 print(f"{op:<22}{b:<10}{cell['count']:>7}" + _fmt_ms(cell.get("mean_ms")))
 
 
+def _print_tree(rows: list[dict[str, Any]]) -> None:
+    print(f"{'span tree':<44}{'count':>7}{'incl_ms':>11}{'excl_ms':>11}")
+    for row in rows:
+        label = "  " * row["depth"] + f"{row['track']}/{row['name']}"
+        if row["truncated"]:
+            label += " …"  # exits evicted / trace cut while open
+        print(f"{label:<44}{row['count']:>7}"
+              f"{row['inclusive_ms']:>11.3f}{row['exclusive_ms']:>11.3f}")
+
+
+def _maybe_merge_device(sess: Session, args: argparse.Namespace) -> None:
+    if getattr(args, "device_trace", None):
+        from repro.trace.device import merge_device_trace
+
+        n = merge_device_trace(sess, args.device_trace,
+                               offset_s=args.device_offset_s)
+        print(f"merged {n} device events from {args.device_trace}",
+              file=sys.stderr)
+
+
 def cmd_report(args: argparse.Namespace) -> int:
     sess = load_any(args.session)
+    _maybe_merge_device(sess, args)
+    if args.tree:
+        rows = sess.tree_report()
+        if args.json:
+            print(json.dumps(rows, indent=1))
+        else:
+            _print_tree(rows)
+        return 0
     rep = sess.report()
     if args.json:
         print(json.dumps(rep, indent=1))
@@ -88,6 +121,7 @@ def cmd_report(args: argparse.Namespace) -> int:
 
 def cmd_export(args: argparse.Namespace) -> int:
     sess = load_any(args.session)
+    _maybe_merge_device(sess, args)
     text = render(sess.events, args.format, meta=sess.meta)
     if args.out:
         with open(args.out, "w") as f:
@@ -124,7 +158,7 @@ def cmd_push_profiles(args: argparse.Namespace) -> int:
 
     try:
         res = push_source(args.session, args.fleet, args.git_sha, args.chip,
-                          force=args.force)
+                          force=args.force, token=args.token)
     except (FleetError, ValueError, FileNotFoundError) as exc:
         print(f"error: {exc}", file=sys.stderr)
         return 1
@@ -213,15 +247,28 @@ def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.trace", description=__doc__)
     sub = ap.add_subparsers(dest="cmd", required=True)
 
+    def _add_device_args(p: argparse.ArgumentParser) -> None:
+        p.add_argument("--device-trace", default=None, metavar="PATH",
+                       help="jax.profiler dump (dir or *.trace.json[.gz]) to "
+                            "fold under the host spans before rendering")
+        p.add_argument("--device-offset-s", type=float, default=None,
+                       metavar="S", help="device->host clock offset override "
+                       "(default: align trace starts)")
+
     p = sub.add_parser("report", help="per-op / per-backend latency tables for one session")
     p.add_argument("session", help="session JSON or streaming segment directory")
+    p.add_argument("--tree", action="store_true",
+                   help="render the span hierarchy (indented, with "
+                        "inclusive/exclusive times per node)")
     p.add_argument("--json", action="store_true", help="machine-readable output")
+    _add_device_args(p)
     p.set_defaults(fn=cmd_report)
 
     p = sub.add_parser("export", help="render a session for a standard trace viewer")
     p.add_argument("session", help="session JSON or streaming segment directory")
     p.add_argument("--format", choices=sorted(FORMATS), default="chrome")
     p.add_argument("-o", "--out", default=None, help="output path (default: stdout)")
+    _add_device_args(p)
     p.set_defaults(fn=cmd_export)
 
     p = sub.add_parser("compact",
@@ -250,6 +297,8 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--force", action="store_true",
                    help="push even if the run already fed this fleet live "
                         "(accepts the double count)")
+    p.add_argument("--token", default=None, metavar="TOKEN",
+                   help="bearer token for a --token-protected fleet daemon")
     p.set_defaults(fn=cmd_push_profiles)
 
     p = sub.add_parser("diff", help="compare two sessions (or two bench artifacts)")

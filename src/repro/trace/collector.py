@@ -21,8 +21,12 @@ write into a bounded collector unchanged.  On top of the raw log it adds:
   :class:`~repro.trace.stream.StreamingSession` persists the full event
   stream even beyond ring capacity;
 * **closed spans** — spawn/exit pairs resolved into ``Span`` records (by span
-  id / payload identity, interleaving-safe), the unit every exporter in
-  :mod:`repro.trace.export` consumes.
+  id / payload identity, interleaving-safe) carrying parent links, the unit
+  every exporter in :mod:`repro.trace.export` consumes;
+* **span trees** — :func:`span_tree` folds the parent links into a forest of
+  :class:`SpanNode` (orphaned children — parent evicted from the ring — fall
+  back to roots), the structure ``report --tree`` and the nested exporters
+  render.
 """
 from __future__ import annotations
 
@@ -31,13 +35,15 @@ import time
 from collections import deque
 from typing import Any, Callable, Iterable, Mapping, Optional
 
-from repro.core.events import Event, EventLog, _pair_key
+from repro.core.events import Event, EventLog, _pair_key, current_span
 
 DEFAULT_CAPACITY = 1 << 16  # 65536 events
 
 # Canonical track per event name.  Anything unlisted lands on "other" unless
 # the collector was constructed with extra mappings.
 TRACK_OF: dict[str, str] = {
+    "serve_run": "run",
+    "train_run": "run",
     "step": "step",
     "train_step": "step",
     "microbatch": "microbatch",
@@ -49,7 +55,19 @@ TRACK_OF: dict[str, str] = {
     "elastic_resize": "checkpoint",
 }
 
-TRACKS = ("step", "microbatch", "request", "checkpoint", "dispatch", "other")
+# Host tracks order before device tracks (``device:<name>``, sorted after the
+# canonical set) so viewers render host rows above their device rows.
+TRACKS = ("run", "step", "microbatch", "request", "checkpoint", "dispatch", "other")
+
+
+def default_track(e: Event) -> str:
+    """Track of an event without a collector (module-level TRACK_OF only)."""
+    if e.kind == "dispatch":
+        return "dispatch"
+    if e.kind == "device":
+        dev = e.payload.get("device") if isinstance(e.payload, dict) else None
+        return f"device:{dev}" if dev else "device"
+    return TRACK_OF.get(e.name, "other")
 
 # Reserved per-track ring sizes: dispatch decisions and checkpoint lifecycle
 # events are rare and small but drive warm-start + recovery analysis — they
@@ -59,7 +77,12 @@ DEFAULT_TRACK_CAPACITY: dict[str, int] = {"dispatch": 4096, "checkpoint": 1024}
 
 @dataclasses.dataclass(frozen=True)
 class Span:
-    """A closed spawn/exit pair (or a zero-length instant for loose events)."""
+    """A closed spawn/exit pair (or a zero-length instant for loose events).
+
+    ``parent`` is the enclosing span's id (0 = root); ``truncated`` marks a
+    span force-closed at the last observed event time because its exit was
+    evicted from the ring (or the trace was cut while it was open).
+    """
 
     name: str
     track: str
@@ -67,10 +90,26 @@ class Span:
     t1: float
     payload: Any = None
     span: int = 0
+    parent: int = 0
+    truncated: bool = False
 
     @property
     def dur(self) -> float:
         return self.t1 - self.t0
+
+
+@dataclasses.dataclass
+class SpanNode:
+    """One node of a span tree: a span plus its resolved children."""
+
+    span: Span
+    children: list["SpanNode"] = dataclasses.field(default_factory=list)
+
+    @property
+    def exclusive(self) -> float:
+        """Self time: duration minus the children's (clamped at 0 — a child
+        force-closed past its parent's exit can overshoot)."""
+        return max(0.0, self.span.dur - sum(c.span.dur for c in self.children))
 
 
 class TraceCollector(EventLog):
@@ -111,14 +150,27 @@ class TraceCollector(EventLog):
 
     # -- recording (track-aware) ---------------------------------------------
 
-    def _track_for(self, kind: str, name: str) -> str:
+    def _track_for(self, kind: str, name: str, payload: Any = None) -> str:
         if kind == "dispatch":
             return "dispatch"
+        if kind == "device":
+            dev = payload.get("device") if isinstance(payload, dict) else None
+            return f"device:{dev}" if dev else "device"
         return self._track_of.get(name, "other")
 
-    def record(self, kind: str, name: str, payload: Any = None, *, span: int = 0) -> None:
-        ev = Event(time.monotonic(), kind, name, payload, span)
-        track = self._track_for(kind, name)
+    def record(
+        self,
+        kind: str,
+        name: str,
+        payload: Any = None,
+        *,
+        span: int = 0,
+        parent: Optional[int] = None,
+    ) -> None:
+        if parent is None:
+            parent = current_span()
+        ev = Event(time.monotonic(), kind, name, payload, span, parent)
+        track = self._track_for(kind, name, payload)
         ring = self._rings.get(track)
         with self._lock:
             if ring is not None:
@@ -161,10 +213,21 @@ class TraceCollector(EventLog):
             return self._dropped + sum(self._ring_dropped.values())
 
     def dropped_by_track(self) -> dict[str, int]:
-        """Per-reserved-track eviction counts (main-ring losses under ``""``)."""
+        """Per-reserved-track eviction counts (main-ring losses under ``""``),
+        plus spans force-closed because their exit was evicted — an orphaned
+        spawn is a lost measurement even though the spawn event itself
+        survived, so it belongs in the same loss accounting.
+
+        Spans legitimately still open count too (the resolver cannot tell an
+        evicted exit from an in-flight unit): call at run end, after the
+        root span has closed, for clean numbers — the drivers do."""
         with self._lock:
             out = dict(self._ring_dropped)
             out[""] = self._dropped
+        orphans: dict[str, int] = {}
+        resolve_spans(self.events(), self.track_name, orphans=orphans)
+        for track, n in orphans.items():
+            out[track] = out.get(track, 0) + n
         return out
 
     def clear(self) -> None:
@@ -187,8 +250,8 @@ class TraceCollector(EventLog):
     # -- track views ---------------------------------------------------------
 
     def track_name(self, event: Event) -> str:
-        """The viewer row an event belongs to (dispatch is kind-keyed)."""
-        return self._track_for(event.kind, event.name)
+        """The viewer row an event belongs to (dispatch/device are kind-keyed)."""
+        return self._track_for(event.kind, event.name, event.payload)
 
     def track(self, track: str) -> list[Event]:
         return [e for e in self.events() if self.track_name(e) == track]
@@ -203,6 +266,10 @@ class TraceCollector(EventLog):
 
     def spans(self) -> list[Span]:
         return resolve_spans(self.events(), self.track_name)
+
+    def span_tree(self) -> list["SpanNode"]:
+        """The resolved spans folded into a parent-linked forest."""
+        return span_tree(self.spans())
 
     # -- accounting ----------------------------------------------------------
 
@@ -225,22 +292,39 @@ class TraceCollector(EventLog):
             return len(self._events) + sum(len(r) for r in self._rings.values())
 
 
-def resolve_spans(events: Iterable[Event], track_name=None) -> list[Span]:
+def resolve_spans(
+    events: Iterable[Event],
+    track_name=None,
+    *,
+    orphans: Optional[dict[str, int]] = None,
+) -> list[Span]:
     """Pair spawn/exit events into closed :class:`Span` records.
 
     Same pairing discipline as :meth:`EventLog.durations` — span id, then
     hashable payload, then LIFO fallback — applied across all names at once.
-    Unpaired spawns are dropped (still open when the trace was cut); events
-    of other kinds (mark/probe/straggler) become zero-length instants, and
-    ``dispatch`` events with a ``measured_s`` payload become spans covering
-    their measured execution window.
+    Parent ids propagate from the spawn event onto the resolved span.
+
+    A spawn whose exit never arrived (evicted from the ring, or the trace
+    was cut while the unit was open) is **force-closed at the last observed
+    event time** and marked ``truncated`` — silently dropping it would leak
+    the whole unit from every report.  ``orphans``, when provided, collects
+    per-track counts of those closes (folded into
+    :meth:`TraceCollector.dropped_by_track`).
+
+    Events of other kinds (mark/probe/straggler) become zero-length
+    instants; ``dispatch`` events with a ``measured_s`` payload become spans
+    covering their measured execution window, and ``device`` events with a
+    ``dur_s`` payload become device-track spans (see
+    :mod:`repro.trace.device`).
     """
     if track_name is None:
-        track_name = lambda e: "dispatch" if e.kind == "dispatch" else TRACK_OF.get(e.name, "other")  # noqa: E731
+        track_name = default_track
     out: list[Span] = []
     open_by_key: dict[Any, list[Event]] = {}
     stack_by_name: dict[str, list[Event]] = {}
+    t_last = 0.0
     for e in events:
+        t_last = max(t_last, e.t)
         if e.kind == "spawn":
             key = _pair_key(e)
             if key is not None:
@@ -256,14 +340,57 @@ def resolve_spans(events: Iterable[Event], track_name=None) -> list[Span]:
                 s = stack_by_name[e.name].pop()
             else:
                 continue  # exit without a visible spawn (evicted from ring)
-            out.append(Span(e.name, track_name(s), s.t, e.t, s.payload, s.span))
+            out.append(Span(e.name, track_name(s), s.t, e.t, s.payload, s.span, s.parent))
         else:
             p = e.payload
             if e.kind == "dispatch" and isinstance(p, dict) and isinstance(
                 p.get("measured_s"), (int, float)
             ):
-                out.append(Span(e.name, track_name(e), e.t - p["measured_s"], e.t, p, e.span))
+                out.append(Span(e.name, track_name(e), e.t - p["measured_s"], e.t,
+                                p, e.span, e.parent))
+            elif e.kind == "device" and isinstance(p, dict) and isinstance(
+                p.get("dur_s"), (int, float)
+            ):
+                out.append(Span(e.name, track_name(e), e.t, e.t + p["dur_s"],
+                                p, e.span, e.parent))
             else:
-                out.append(Span(e.name, track_name(e), e.t, e.t, p, e.span))
+                out.append(Span(e.name, track_name(e), e.t, e.t, p, e.span, e.parent))
+    for opened in list(open_by_key.values()) + list(stack_by_name.values()):
+        for s in opened:
+            track = track_name(s)
+            out.append(Span(s.name, track, s.t, t_last, s.payload, s.span,
+                            s.parent, truncated=True))
+            if orphans is not None:
+                orphans[track] = orphans.get(track, 0) + 1
     out.sort(key=lambda s: s.t0)
     return out
+
+
+def span_tree(spans: Iterable[Span]) -> list[SpanNode]:
+    """Fold parent links into a forest of :class:`SpanNode`.
+
+    Orphan-to-root fallback: a span whose parent id is not among the
+    resolved spans (the parent's events were evicted before the trace was
+    read) becomes a root — the subtree survives instead of vanishing.  Span
+    ids are allocated before their children's, so a parent id >= the span's
+    own id is treated as corrupt and also falls back to root (keeps the
+    forest acyclic on torn input).  Roots and children are ordered by start
+    time.
+    """
+    nodes = [SpanNode(s) for s in spans]
+    by_id: dict[int, SpanNode] = {}
+    for n in nodes:
+        if n.span.span:
+            by_id.setdefault(n.span.span, n)
+    roots: list[SpanNode] = []
+    for n in nodes:
+        p = n.span.parent
+        parent = by_id.get(p) if p else None
+        if parent is None or parent is n or (n.span.span and p >= n.span.span):
+            roots.append(n)
+        else:
+            parent.children.append(n)
+    for n in nodes:
+        n.children.sort(key=lambda c: c.span.t0)
+    roots.sort(key=lambda n: n.span.t0)
+    return roots

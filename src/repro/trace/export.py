@@ -4,11 +4,16 @@ Everything a standard viewer can open:
 
 * :func:`to_chrome_trace` — the Trace Event Format (``traceEvents``) that
   Perfetto / ``chrome://tracing`` load directly.  Spawn/exit pairs become
-  ``B``/``E`` duration events, dispatch decisions become ``X`` complete
-  events spanning their measured execution, loose marks/probes become ``i``
-  instants.  Tracks map to ``tid`` rows under one ``pid``.
-* :func:`to_speedscope` — a sampled speedscope profile per track (each
-  closed span is one weighted sample), https://speedscope.app loads it.
+  async ``b``/``e`` duration events **grouped by their root span id**, so a
+  request and every descendant (prefill, nested lifecycles) nest on one
+  async track exactly like the span tree; dispatch decisions become ``X``
+  complete events spanning their measured execution with ``s``/``f`` flow
+  links from the request span that caused them; device events (merged via
+  :mod:`repro.trace.device`) become ``X`` rows on per-device tracks below
+  the host tracks; loose marks/probes become ``i`` instants.
+* :func:`to_speedscope` — an **evented** speedscope profile per track
+  (open/close events follow the span tree, rebalanced where siblings
+  overlap so the file always validates), https://speedscope.app loads it.
 * :func:`to_folded` — ``track;name count`` folded stacks for classic
   ``flamegraph.pl`` / inferno tooling (counts in integer microseconds).
 """
@@ -18,15 +23,23 @@ import json
 from typing import Any, Iterable, Optional
 
 from repro.core.events import Event
-from repro.trace.collector import TRACKS, Span, TraceCollector, resolve_spans
+from repro.trace.collector import (
+    TRACKS,
+    Span,
+    TraceCollector,
+    default_track,
+    resolve_spans,
+    span_tree,
+)
 
 PID = 1  # single-process traces; tracks are threads
 
 
 def _track_ids(tracks: Iterable[str]) -> dict[str, int]:
     order = {t: i for i, t in enumerate(TRACKS)}
-    # canonical tracks keep stable tids; custom tracks get distinct tids after
-    # them (alphabetical), one viewer row each
+    # canonical tracks keep stable tids; custom tracks (including device:*)
+    # get distinct tids after them (alphabetical), one viewer row each —
+    # host rows therefore always render above device rows
     uniq = sorted(set(tracks), key=lambda t: (order.get(t, len(order)), t))
     return {t: i + 1 for i, t in enumerate(uniq)}
 
@@ -41,11 +54,25 @@ def _payload_args(payload: Any) -> dict[str, Any]:
 
 
 def _tracker(collector: Optional[TraceCollector]):
-    if collector is not None:
-        return collector.track_name
-    from repro.trace.collector import TRACK_OF
+    return collector.track_name if collector is not None else default_track
 
-    return lambda e: "dispatch" if e.kind == "dispatch" else TRACK_OF.get(e.name, "other")
+
+def _parent_index(events: Iterable[Event]) -> dict[int, int]:
+    """span id -> parent id, from every event that carries both."""
+    out: dict[int, int] = {}
+    for e in events:
+        if e.span and e.parent:
+            out.setdefault(e.span, e.parent)
+    return out
+
+
+def _root_of(span: int, parents: dict[int, int]) -> int:
+    """Topmost ancestor of ``span`` (cycle-guarded: parents precede children)."""
+    seen = set()
+    while span in parents and span not in seen:
+        seen.add(span)
+        span = parents[span]
+    return span
 
 
 def to_chrome_trace(
@@ -62,6 +89,8 @@ def to_chrome_trace(
     events = sorted(events, key=lambda e: e.t)
     track_name = _tracker(collector)
     tids = _track_ids(track_name(e) for e in events)
+    parents = _parent_index(events)
+    spawn_of = {e.span: e for e in events if e.kind == "spawn" and e.span}
 
     def start_of(e: Event) -> float:
         # dispatch events are recorded at completion; their X row starts
@@ -73,10 +102,12 @@ def to_chrome_trace(
         return e.t
 
     def async_id(e: Event) -> Optional[str]:
-        """Pairing id for spawn/exit: concurrent units must not be matched by
-        the viewer's per-tid LIFO stack (interleaved requests would swap)."""
+        """Async grouping id for spawn/exit.  Parent-linked spans share their
+        ROOT span's id, so Perfetto nests the whole subtree by timestamp on
+        one async track — real parent nesting, not per-tid LIFO guessing.
+        Unlinked spans fall back to their own id / payload identity."""
         if e.span:
-            return str(e.span)
+            return str(_root_of(e.span, parents))
         try:
             hash(e.payload)
         except TypeError:
@@ -84,6 +115,22 @@ def to_chrome_trace(
         if e.payload is None:
             return None
         return f"{e.name}:{e.payload!r}"
+
+    def flow_source(e: Event) -> Optional[Event]:
+        """The spawn event a dispatch decision's flow arrow starts from: the
+        nearest ancestor on the ``request`` track (the paper's unit of
+        concurrency), else the direct parent span."""
+        sid, fallback = e.parent, None
+        while sid:
+            src = spawn_of.get(sid)
+            if src is None:
+                break
+            if fallback is None:
+                fallback = src
+            if track_name(src) == "request":
+                return src
+            sid = parents.get(sid, 0)
+        return fallback
 
     t0 = min((start_of(e) for e in events), default=0.0)
     us = lambda t: round((t - t0) * 1e6, 3)  # noqa: E731
@@ -94,15 +141,19 @@ def to_chrome_trace(
     for track, tid in tids.items():
         rows.append({"ph": "M", "pid": PID, "tid": tid, "name": "thread_name",
                      "args": {"name": track}})
+    n_flows = 0
     for e in events:
         tid = tids[track_name(e)]
         base = {"name": e.name, "pid": PID, "tid": tid, "ts": us(e.t),
                 "args": _payload_args(e.payload)}
         if e.span:
             base["args"]["span"] = e.span
+        if e.parent:
+            base["args"]["parent"] = e.parent
         if e.kind in ("spawn", "exit"):
-            # async b/e (paired by id) when the event carries an identity;
-            # sync B/E (viewer LIFO) only for legacy identity-less events
+            # async b/e (grouped by root span id -> nested subtree) when the
+            # event carries an identity; sync B/E (viewer LIFO) only for
+            # legacy identity-less events
             aid = async_id(e)
             ph = {"spawn": ("b" if aid else "B"), "exit": ("e" if aid else "E")}[e.kind]
             row = {**base, "ph": ph, "cat": "lifecycle"}
@@ -115,12 +166,83 @@ def to_chrome_trace(
             dur = round(e.payload["measured_s"] * 1e6, 3)
             rows.append({**base, "ph": "X", "cat": "dispatch",
                          "ts": us(start_of(e)), "dur": dur})
+            src = flow_source(e)
+            if src is not None:
+                # flow arrow: the request/step span that caused this dispatch
+                n_flows += 1
+                fid = str(n_flows)
+                rows.append({"ph": "s", "cat": "flow", "name": "dispatch",
+                             "id": fid, "pid": PID, "tid": tids[track_name(src)],
+                             "ts": us(src.t)})
+                rows.append({"ph": "f", "bp": "e", "cat": "flow", "name": "dispatch",
+                             "id": fid, "pid": PID, "tid": tid,
+                             "ts": us(start_of(e))})
+        elif e.kind == "device" and isinstance(e.payload, dict) and isinstance(
+            e.payload.get("dur_s"), (int, float)
+        ):
+            rows.append({**base, "ph": "X", "cat": "device",
+                         "dur": round(e.payload["dur_s"] * 1e6, 3)})
         else:
             rows.append({**base, "ph": "i", "cat": e.kind, "s": "t"})
     out: dict[str, Any] = {"traceEvents": rows, "displayTimeUnit": "ms"}
     if meta:
         out["otherData"] = _payload_args(meta)
     return out
+
+
+def _evented_profile(track: str, spans: list[Span], epoch: float, frame) -> dict[str, Any]:
+    """One speedscope ``evented`` profile for a track's spans.
+
+    ``frame`` interns a span name into the shared frame table.  Open/close
+    events are emitted in timestamp order with stack discipline enforced:
+    when a span closes while a later-opened sibling is still on the stack
+    (concurrent requests interleave on one track), the intervening frames
+    are closed and immediately reopened — the rebalancing every chrome-trace
+    importer applies, preserving per-frame weight while keeping the file
+    valid.
+    """
+    # (t, kind, idx): closes sort before opens at the same instant so a
+    # zero-gap back-to-back pair doesn't nest; ties between closes resolve
+    # by reverse open order via the stack rebalancing below
+    marks: list[tuple[float, int, int]] = []
+    for i, s in enumerate(spans):
+        marks.append((s.t0, 1, i))
+        marks.append((s.t1, 0, i))
+    marks.sort(key=lambda m: (m[0], m[1]))
+    events: list[dict[str, Any]] = []
+    stack: list[int] = []
+
+    def emit(typ: str, idx: int, t: float) -> None:
+        events.append({"type": typ, "frame": frame(spans[idx].name), "at": t - epoch})
+
+    for t, kind, idx in marks:
+        if kind == 1:
+            stack.append(idx)
+            emit("O", idx, t)
+        else:
+            if idx not in stack:
+                continue
+            reopen: list[int] = []
+            while stack and stack[-1] != idx:
+                top = stack.pop()
+                emit("C", top, t)
+                reopen.append(top)
+            stack.pop()
+            emit("C", idx, t)
+            for top in reversed(reopen):
+                stack.append(top)
+                emit("O", top, t)
+    end = max((s.t1 for s in spans), default=epoch)
+    while stack:  # defensive: truncated spans are pre-closed by resolve_spans
+        emit("C", stack.pop(), end)
+    return {
+        "type": "evented",
+        "name": track,
+        "unit": "seconds",
+        "startValue": min((s.t0 for s in spans), default=epoch) - epoch,
+        "endValue": end - epoch,
+        "events": events,
+    }
 
 
 def to_speedscope(
@@ -130,10 +252,14 @@ def to_speedscope(
     name: str = "repro.trace",
     meta: Optional[dict[str, Any]] = None,
 ) -> dict[str, Any]:
-    """Speedscope file: one sampled profile per track, spans as samples.
+    """Speedscope file: one **evented** profile per track.
 
-    ``meta`` (session provenance) titles the profile with the run's git SHA
-    so stacked speedscope tabs from different runs stay distinguishable.
+    Each track's spans become open/close frame events whose nesting follows
+    the span tree (a request frame encloses its prefill frame, which
+    encloses nothing a sibling owns), instead of the flat one-weighted-
+    sample-per-span profiles the exporter used to emit.  ``meta`` (session
+    provenance) titles the profile with the run's git SHA so stacked
+    speedscope tabs from different runs stay distinguishable.
     """
     if meta and meta.get("git_sha") and name == "repro.trace":
         name = f"repro.trace@{meta['git_sha']}"
@@ -151,17 +277,11 @@ def to_speedscope(
     for s in spans:
         if s.dur > 0:
             by_track.setdefault(s.track, []).append(s)
-    profiles = []
-    for track, ss in sorted(by_track.items()):
-        profiles.append({
-            "type": "sampled",
-            "name": track,
-            "unit": "seconds",
-            "startValue": 0.0,
-            "endValue": sum(s.dur for s in ss),
-            "samples": [[frame(s.name)] for s in ss],
-            "weights": [s.dur for s in ss],
-        })
+    epoch = min((s.t0 for ss in by_track.values() for s in ss), default=0.0)
+    profiles = [
+        _evented_profile(track, ss, epoch, frame)
+        for track, ss in sorted(by_track.items())
+    ]
     return {
         "$schema": "https://www.speedscope.app/file-format-schema.json",
         "name": name,
@@ -178,16 +298,32 @@ def to_folded(
     collector: Optional[TraceCollector] = None,
     meta: Optional[dict[str, Any]] = None,  # accepted for exporter uniformity
 ) -> str:
-    """Folded flamegraph stacks: ``track;name <microseconds>`` per line."""
+    """Folded flamegraph stacks: full ancestor paths, one line per leaf.
+
+    Parent links turn the old flat ``track;name`` pairs into real stacks —
+    ``request;prefill;serve_prefill`` style — weighted by each node's
+    exclusive time so the flamegraph's column widths sum correctly.
+    """
     spans = resolve_spans(sorted(events, key=lambda e: e.t), _tracker(collector))
     agg: dict[str, int] = {}
-    for s in spans:
-        if s.dur <= 0:
-            continue
-        stack = f"{s.track};{s.name}"
+
+    def leaf_name(s: Span) -> str:
+        n = s.name
         if isinstance(s.payload, dict) and "backend" in s.payload:
-            stack += f";{s.payload['backend']}"
-        agg[stack] = agg.get(stack, 0) + int(round(s.dur * 1e6))
+            n += f";{s.payload['backend']}"
+        return n
+
+    def walk(node, prefix: str) -> None:
+        s = node.span
+        stack = f"{prefix};{leaf_name(s)}" if prefix else f"{s.track};{leaf_name(s)}"
+        us = int(round(node.exclusive * 1e6))
+        if s.dur > 0 and us > 0:
+            agg[stack] = agg.get(stack, 0) + us
+        for c in node.children:
+            walk(c, stack)
+
+    for root in span_tree(spans):
+        walk(root, "")
     return "\n".join(f"{k} {v}" for k, v in sorted(agg.items())) + ("\n" if agg else "")
 
 

@@ -22,7 +22,7 @@ from typing import Any, Optional
 
 from repro.core.events import Event, EventLog
 from repro.dispatch.profiles import ProfileStore
-from repro.trace.collector import Span, resolve_spans
+from repro.trace.collector import Span, SpanNode, resolve_spans, span_tree
 
 SESSION_SCHEMA = "repro.trace.session/v1"
 ARTIFACT_SCHEMA = "repro.bench/v1"
@@ -159,6 +159,41 @@ class Session:
     def spans(self) -> list[Span]:
         return resolve_spans(sorted(self.events, key=lambda e: e.t))
 
+    def span_tree(self) -> list[SpanNode]:
+        """The session's spans folded into a parent-linked forest."""
+        return span_tree(self.spans())
+
+    def tree_report(self) -> list[dict[str, Any]]:
+        """Aggregated span-tree rows (the ``report --tree`` view).
+
+        Sibling spans are grouped by (track, name) at each depth — a serve
+        run shows one ``request`` row with count 12, its ``prefill`` child
+        row, and the ``dispatch`` decisions nested below — with inclusive
+        (span duration) and exclusive (minus children) totals per node.
+        """
+        rows: list[dict[str, Any]] = []
+
+        def visit(nodes: list[SpanNode], depth: int) -> None:
+            groups: dict[tuple[str, str], list[SpanNode]] = {}
+            for n in nodes:
+                groups.setdefault((n.span.track, n.span.name), []).append(n)
+            for (track, name), ns in sorted(
+                groups.items(), key=lambda kv: min(x.span.t0 for x in kv[1])
+            ):
+                rows.append({
+                    "depth": depth,
+                    "track": track,
+                    "name": name,
+                    "count": len(ns),
+                    "inclusive_ms": sum(n.span.dur for n in ns) * 1e3,
+                    "exclusive_ms": sum(n.exclusive for n in ns) * 1e3,
+                    "truncated": sum(1 for n in ns if n.span.truncated),
+                })
+                visit([c for n in ns for c in n.children], depth + 1)
+
+        visit(self.span_tree(), 0)
+        return rows
+
     def report(self) -> dict[str, Any]:
         """Deterministic per-op / per-backend tables (the CLI renders these).
 
@@ -167,7 +202,14 @@ class Session:
         """
         spans = self.spans()
         lat: dict[str, dict[str, float]] = {}
+        truncated = 0
         for s in spans:
+            if s.truncated:
+                # force-closed at an arbitrary cut point, not a measurement:
+                # one evicted exit would otherwise inflate mean/max by the
+                # whole remaining run and trip the diff --fail-over-pct gate
+                truncated += 1
+                continue
             if s.dur <= 0:
                 continue
             row = lat.setdefault(f"{s.track}/{s.name}", {"count": 0, "total_ms": 0.0,
@@ -201,6 +243,7 @@ class Session:
             "meta": {k: self.meta.get(k) for k in ("schema", "git_sha", "created_unix")},
             "events": len(self.events),
             "dropped": self.dropped,
+            "truncated_spans": truncated,
             "latency": lat,
             "dispatch": {
                 "decisions": len(self.decisions),

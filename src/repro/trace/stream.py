@@ -426,28 +426,48 @@ def _seg_indices(path: str) -> list[int]:
     return sorted(out)
 
 
-def _render_event(row: dict[str, Any], open_spans: dict[Any, float]) -> str:
-    """One human line per event: track, kind, name, and a duration on exit."""
+def _render_event(row: dict[str, Any], open_spans: dict[Any, Any]) -> str:
+    """One human line per event: track, kind, depth-marked name, duration.
+
+    ``open_spans`` maps span keys to ``(t0, depth)``; depth comes from the
+    event's ``parent`` link when that parent is still open, so nested units
+    (request > prefill > dispatch) indent under their ancestors live.
+    """
     from repro.trace.collector import TRACK_OF
 
     t = row.get("t", 0.0)
     kind = str(row.get("kind", "?"))
     name = str(row.get("name", "?"))
-    track = "dispatch" if kind == "dispatch" else TRACK_OF.get(name, "other")
+    payload = row.get("payload")
+    if kind == "dispatch":
+        track = "dispatch"
+    elif kind == "device":
+        dev = payload.get("device") if isinstance(payload, dict) else None
+        track = f"device:{dev}" if dev else "device"
+    else:
+        track = TRACK_OF.get(name, "other")
     key = ("span", row["span"]) if row.get("span") else ("name", name)
+    parent = row.get("parent") or 0
+    pent = open_spans.get(("span", parent)) if parent else None
+    depth = (pent[1] + 1) if pent is not None else 0
     extra = ""
     if kind == "spawn":
-        open_spans[key] = t
+        open_spans[key] = (t, depth)
     elif kind == "exit":
-        t0 = open_spans.pop(key, None)
-        if t0 is not None:
-            extra = f"dur={1e3 * (t - t0):.3f}ms"
-    elif kind == "dispatch" and isinstance(row.get("payload"), dict):
-        p = row["payload"]
-        extra = f"{p.get('backend')} ({p.get('source')})"
-        if isinstance(p.get("measured_s"), (int, float)):
-            extra += f" dur={1e3 * p['measured_s']:.3f}ms"
-    return f"{t:14.6f}  {track:<10} {kind:<8} {name:<18} {extra}".rstrip()
+        ent = open_spans.pop(key, None)
+        if ent is not None:
+            extra = f"dur={1e3 * (t - ent[0]):.3f}ms"
+            depth = ent[1]
+    elif kind == "dispatch" and isinstance(payload, dict):
+        extra = f"{payload.get('backend')} ({payload.get('source')})"
+        if isinstance(payload.get("measured_s"), (int, float)):
+            extra += f" dur={1e3 * payload['measured_s']:.3f}ms"
+    elif kind == "device" and isinstance(payload, dict) and isinstance(
+        payload.get("dur_s"), (int, float)
+    ):
+        extra = f"dur={1e3 * payload['dur_s']:.3f}ms"
+    marked = "· " * depth + name  # depth markers: one dot per ancestor level
+    return f"{t:14.6f}  {track:<10} {kind:<8} {marked:<18} {extra}".rstrip()
 
 
 class _Tailer:
@@ -463,7 +483,7 @@ class _Tailer:
         indices = _seg_indices(path)
         self.index = indices[0] if indices else 0
         self.offset = 0
-        self.open_spans: dict[Any, float] = {}
+        self.open_spans: dict[Any, tuple[float, int]] = {}
 
     def _paths(self, index: int) -> tuple[str, str]:
         name = os.path.join(self.path, f"{SEGMENT_PREFIX}{index:06d}.jsonl")

@@ -298,6 +298,90 @@ def test_file_and_http_transports_share_format(fleet_server, tmp_path):
     assert file_url.pull("sha1", "chipA")["match"] == "exact"
 
 
+# ---------------------------------------------------------------------------
+# Authn: --token guards push/gc; pull stays open; 401s counted
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def auth_server(tmp_path):
+    server = make_server(str(tmp_path / "fleet_root"), port=0, token="s3cret")
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        yield server
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+def test_token_required_on_push_and_gc(auth_server):
+    anon = FleetClient(auth_server.url)
+    with pytest.raises(FleetError, match="401"):
+        anon.push(_store([0.001]), "sha1", "chipA")
+    with pytest.raises(FleetError, match="401"):
+        anon.gc(keep_per_chip=0)
+    wrong = FleetClient(auth_server.url, token="wrong")
+    with pytest.raises(FleetError, match="401"):
+        wrong.push(_store([0.001]), "sha1", "chipA")
+    # every rejection is counted in the daemon stats
+    health = anon.health()
+    assert health["auth"] is True
+    assert health["stats"]["auth_failures"] == 3
+    assert health["stats"]["pushes"] == 0  # nothing landed
+    assert len(auth_server.fleet) == 0
+
+
+def test_token_holder_can_push_and_pull_stays_open(auth_server):
+    authed = FleetClient(auth_server.url, token="s3cret")
+    assert authed.push(_store([0.001, 0.002]), "sha1", "chipA")["merged_samples"] == 2
+    # pull/ls/healthz require no token: a shared fleet warm-starts everyone
+    anon = FleetClient(auth_server.url)
+    assert anon.pull("sha1", "chipA")["match"] == "exact"
+    assert anon.ls()[0]["git_sha"] == "sha1"
+    assert authed.gc(keep_per_chip=0)
+    stats = anon.health()["stats"]
+    assert stats["pushes"] == 1 and stats["gcs"] == 1 and stats["pulls"] == 1
+    assert stats["auth_failures"] == 0
+
+
+def test_cli_serve_token_and_push_flag(tmp_path, capsys):
+    """End-to-end through the CLIs: a token-protected daemon rejects
+    `fleet push` without --token and accepts it with one."""
+    profile = str(tmp_path / "p.json")
+    with open(profile, "w") as f:
+        f.write(_store([0.001], git_sha="sha1", chip="chipA").to_json())
+
+    server = make_server(str(tmp_path / "root"), port=0, token="tok")
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        assert fleet_main(["push", profile, "--fleet", server.url]) == 1
+        assert "401" in capsys.readouterr().err
+        assert fleet_main(["push", profile, "--fleet", server.url,
+                           "--token", "tok"]) == 0
+        assert json.loads(capsys.readouterr().out)["merged_samples"] == 1
+        assert fleet_main(["ls", "--fleet", server.url]) == 0  # open without token
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+def test_unauthorized_pusher_degrades_not_crashes(auth_server):
+    """A FleetPusher with a bad token behaves like an unreachable fleet:
+    best-effort failure, delta retained for retry."""
+    live = ProfileStore()
+    pusher = FleetPusher(FleetClient(auth_server.url), live, "sha1", "chipA")
+    live.record("op", "be", "<s>", 0.001)
+    res = pusher.push()
+    assert res["pushed"] is False and "401" in res["error"]
+    assert pusher.pushed_samples == 0
+    # fixing the token on the same client delivers the retained delta
+    pusher.client = FleetClient(auth_server.url, token="s3cret")
+    assert pusher.push()["pushed"] is True
+    assert pusher.pushed_samples == 1
+
+
 def test_concurrent_http_pushes_lose_no_samples(fleet_server):
     """The satellite stress test: concurrent overlapping pushes must
     Welford-merge losslessly (count, mean and min all exact)."""

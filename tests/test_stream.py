@@ -109,6 +109,45 @@ def test_stream_rotate_snapshots_profiles(tmp_path):
     assert load_stream(d).store is not None
 
 
+def test_stream_preserves_parent_links_across_segments(tmp_path):
+    """A span's spawn and its children routinely land in different segments;
+    recovery (without close()) must rebuild the same tree."""
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    StreamingSession(d, rotate_events=2).attach(col)  # 1 event per line pair
+    with col.lifecycle("request", "A") as rid:
+        with col.lifecycle("prefill", "A") as pf:
+            col.record("mark", "probe")
+    with col.lifecycle("request", "B"):
+        pass
+    # simulated crash: never closed; events span >= 3 segments
+    assert len([n for n in os.listdir(d) if n.endswith(".jsonl")]) >= 3
+
+    sess = load_stream(d)
+    spawns = {e.span: e for e in sess.events if e.kind == "spawn"}
+    assert spawns[pf].parent == rid
+    mark = next(e for e in sess.events if e.kind == "mark")
+    assert mark.parent == pf
+    roots = sess.span_tree()
+    req_a = next(n for n in roots if n.span.payload == "A")
+    assert [c.span.span for c in req_a.children] == [pf]
+    assert [c.span.name for c in req_a.children[0].children] == ["probe"]
+
+
+def test_tail_prints_depth_markers(tmp_path, capsys):
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    stream = StreamingSession(d, rotate_events=64).attach(col)
+    with col.lifecycle("request", 0):
+        with col.lifecycle("prefill", 0):
+            pass
+    stream.close(stats=col.stats())
+    assert main(["tail", d, "--once"]) == 0
+    lines = [l for l in capsys.readouterr().out.splitlines() if l]
+    assert any("· prefill" in l for l in lines)  # one dot: depth 1
+    assert not any("· request" in l for l in lines)  # roots unmarked
+
+
 # ---------------------------------------------------------------------------
 # Crash recovery
 # ---------------------------------------------------------------------------
@@ -218,6 +257,16 @@ def test_serve_sigkill_mid_run_recovers(tmp_path):
     sess = Session.load(out)
     # every event of every closed segment survives the kill
     assert len(sess.events) >= sum(s["events"] for s in manifest["segments"])
+    # parent links survive the kill too: requests hang off the run root
+    # (the kill can land before any prefill streams, but request spawns are
+    # written first and the serve_run spawn is the very first event)
+    spawn_name = {e.span: e.name for e in sess.events if e.kind == "spawn"}
+    req_parents = {spawn_name.get(e.parent) for e in sess.events
+                   if e.kind == "spawn" and e.name == "request"}
+    assert req_parents == {"serve_run"}
+    prefill_parents = {spawn_name.get(e.parent) for e in sess.events
+                       if e.kind == "spawn" and e.name == "prefill"}
+    assert prefill_parents <= {"request"}  # empty only if killed pre-admission
     assert main(["report", out]) == 0
     assert main(["report", d]) == 0  # report directly on the remnants too
 

@@ -233,16 +233,34 @@ def test_chrome_trace_export_is_valid_trace_event_json():
 
 
 def test_speedscope_export_schema():
+    """Evented profiles: balanced O/C per frame, nondecreasing timestamps,
+    stack discipline (a close always closes the most recent open)."""
     col = _sample_collector()
     doc = json.loads(export(col.events(), "speedscope", collector=col))
     assert doc["$schema"] == "https://www.speedscope.app/file-format-schema.json"
     assert doc["profiles"], "no profiles"
     frames = doc["shared"]["frames"]
     for p in doc["profiles"]:
-        assert p["type"] == "sampled"
-        assert len(p["samples"]) == len(p["weights"])
-        assert all(0 <= s[0] < len(frames) for s in p["samples"])
-        assert p["endValue"] == pytest.approx(sum(p["weights"]))
+        assert p["type"] == "evented"
+        assert p["events"], f"empty profile {p['name']}"
+        last_at = p["startValue"]
+        stack = []
+        opens: dict = {}
+        for ev in p["events"]:
+            assert ev["type"] in ("O", "C")
+            assert 0 <= ev["frame"] < len(frames)
+            assert ev["at"] >= last_at  # nondecreasing
+            last_at = ev["at"]
+            if ev["type"] == "O":
+                stack.append(ev["frame"])
+                opens[ev["frame"]] = opens.get(ev["frame"], 0) + 1
+            else:
+                assert stack and stack[-1] == ev["frame"]  # strict LIFO
+                stack.pop()
+                opens[ev["frame"]] -= 1
+        assert not stack  # every frame closed
+        assert all(v == 0 for v in opens.values())
+        assert p["endValue"] >= last_at
 
 
 def test_folded_export():
