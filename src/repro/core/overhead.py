@@ -39,6 +39,38 @@ class TimingStats:
         return self.mean_ms / base.mean_ms - 1.0
 
 
+def stats_from_samples(
+    label: str,
+    samples_ms: list[float],
+    *,
+    user_s: float = 0.0,
+    system_s: float = 0.0,
+) -> TimingStats:
+    """Fold raw wall-time samples (ms) into a :class:`TimingStats` row.
+
+    The summary half of the hyperfine protocol, exposed on its own so other
+    measurement loops (the adaptive tracing controller's no-op calibration,
+    the record-path benchmark) report in the same Table-I vocabulary."""
+    s = sorted(samples_ms)
+    n = len(s)
+    if n == 0:
+        raise ValueError("stats_from_samples needs at least one sample")
+    mean = sum(s) / n
+    var = sum((x - mean) ** 2 for x in s) / max(n - 1, 1)
+    median = s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+    return TimingStats(
+        label=label,
+        runs=n,
+        mean_ms=mean,
+        stddev_ms=math.sqrt(var),
+        median_ms=median,
+        min_ms=s[0],
+        max_ms=s[-1],
+        user_s=user_s,
+        system_s=system_s,
+    )
+
+
 def hyperfine(
     fn: Callable[[], Any],
     *,
@@ -65,19 +97,9 @@ def hyperfine(
         once()
         samples.append((time.perf_counter() - t0) * 1e3)
     ru1 = resource.getrusage(resource.RUSAGE_SELF)
-    s = sorted(samples)
-    n = len(s)
-    mean = sum(s) / n
-    var = sum((x - mean) ** 2 for x in s) / max(n - 1, 1)
-    median = s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
-    return TimingStats(
-        label=label,
-        runs=n,
-        mean_ms=mean,
-        stddev_ms=math.sqrt(var),
-        median_ms=median,
-        min_ms=s[0],
-        max_ms=s[-1],
+    return stats_from_samples(
+        label,
+        samples,
         user_s=ru1.ru_utime - ru0.ru_utime,
         system_s=ru1.ru_stime - ru0.ru_stime,
     )

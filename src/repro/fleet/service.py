@@ -4,6 +4,7 @@ No third-party dependencies — a ``ThreadingHTTPServer`` speaking a small
 JSON protocol (one route per :class:`~repro.fleet.store.FleetStore` verb):
 
     GET  /healthz                          liveness + bucket count + stats
+    GET  /metrics                          Prometheus text (same counters)
     GET  /v1/ls                            bucket metadata listing
     GET  /v1/pull?git_sha=S&chip=C         best match (exact → chip → miss)
     POST /v1/push   {git_sha, chip, store} Welford-merge a snapshot in
@@ -18,21 +19,30 @@ verbs) then require ``Authorization: Bearer T``; pull/ls/healthz stay open
 — a shared fleet wants everyone warm-starting but only trusted runs feeding
 the Welford state.  Rejections are 401s, counted in the daemon's stats
 (``auth_failures`` in ``/healthz``).
+
+``/healthz`` and ``/metrics`` read the **same**
+:class:`~repro.metrics.registry.MetricsRegistry` counters — there is one
+counter source, so the two surfaces can never drift apart.
 """
 from __future__ import annotations
 
 import hmac
 import json
 import sys
-import threading
 import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Optional
 
 from repro.dispatch.profiles import ProfileStore
 from repro.fleet.store import FleetStore
+from repro.metrics.http import PROM_CONTENT_TYPE
+from repro.metrics.registry import MetricsRegistry
 
 MAX_PUSH_BYTES = 64 << 20  # a merged ProfileStore is KBs; 64 MiB is generous
+
+# Daemon verb counters; /healthz reports them under these short keys, the
+# Prometheus surface as repro_fleet_<key>_total — same Counter objects.
+STAT_KEYS = ("pushes", "pulls", "gcs", "auth_failures")
 
 
 class FleetServer(ThreadingHTTPServer):
@@ -47,19 +57,20 @@ class FleetServer(ThreadingHTTPServer):
         self.fleet = fleet
         self.quiet = quiet
         self.token = token
-        self._stats_lock = threading.Lock()
-        self.stats: dict[str, int] = {
-            "pushes": 0, "pulls": 0, "gcs": 0, "auth_failures": 0,
-        }
+        # single counter source for /healthz AND /metrics: a parallel dict
+        # would inevitably drift from the scraped series
+        self.metrics = MetricsRegistry()
+        for key in STAT_KEYS:
+            self.metrics.counter(f"repro_fleet_{key}_total",
+                                 f"fleet daemon {key.replace('_', ' ')}")
         super().__init__(addr, _Handler)
 
     def count(self, key: str) -> None:
-        with self._stats_lock:
-            self.stats[key] = self.stats.get(key, 0) + 1
+        self.metrics.counter(f"repro_fleet_{key}_total").inc()
 
     def stats_snapshot(self) -> dict[str, int]:
-        with self._stats_lock:
-            return dict(self.stats)
+        return {key: int(self.metrics.counter(f"repro_fleet_{key}_total").value)
+                for key in STAT_KEYS}
 
     @property
     def url(self) -> str:
@@ -89,6 +100,14 @@ class _Handler(BaseHTTPRequestHandler):
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
         self.wfile.write(body)
+
+    def _send_text(self, code: int, body: str, ctype: str) -> None:
+        raw = body.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(raw)))
+        self.end_headers()
+        self.wfile.write(raw)
 
     def _error(self, code: int, message: str) -> None:
         self._send(code, {"error": message})
@@ -139,6 +158,13 @@ class _Handler(BaseHTTPRequestHandler):
                                  "snapshots": len(self.server.fleet),
                                  "auth": self.server.token is not None,
                                  "stats": self.server.stats_snapshot()})
+            elif url.path == "/metrics":
+                # same registry /healthz reads — one counter source, no drift
+                self.server.metrics.gauge(
+                    "repro_fleet_snapshots",
+                    "profile snapshots held by the store").set(len(self.server.fleet))
+                self._send_text(200, self.server.metrics.render(),
+                                PROM_CONTENT_TYPE)
             elif url.path == "/v1/ls":
                 self._send(200, {"snapshots": self.server.fleet.ls()})
             elif url.path == "/v1/pull":

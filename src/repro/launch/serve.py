@@ -17,6 +17,13 @@ snapshot at startup (exact (git SHA, chip) match, falling back through
 chip-only to nothing — stale-stamped entries re-explore), pushes measured
 deltas at shutdown, and — with --trace-dir — at every streaming rotation, so
 a long-lived server continuously feeds the central store.
+
+Live metrics (repro.metrics): --metrics-port P scrapes Prometheus text at
+http://127.0.0.1:P/metrics while the server runs; --trace-overhead-budget-pct
+B starts the adaptive controller, which self-measures record-path overhead
+and duty-cycles span capture to keep it under B% (0 = always-on: measure but
+never shed).  Either flag activates the controller; metric snapshots land in
+--trace-dir at every rotation and in the final JSON under "metrics".
 """
 from __future__ import annotations
 
@@ -81,6 +88,18 @@ def main() -> None:
                          "(repeatable; multiple files are merged)")
     ap.add_argument("--profile-out", default=None, metavar="PATH",
                     help="write the measured ProfileStore for the next run")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus /metrics on this port while the "
+                         "run is live (0 picks a free port)")
+    ap.add_argument("--trace-overhead-budget-pct", type=float, default=None,
+                    metavar="PCT",
+                    help="adaptive tracing: duty-cycle span capture to keep "
+                         "self-measured record-path overhead under PCT%% "
+                         "(0 = always-on: measure, never shed; default 5 "
+                         "when --metrics-port is given)")
+    ap.add_argument("--metrics-linger-s", type=float, default=0.0, metavar="S",
+                    help="keep the /metrics listener up S seconds after the "
+                         "run completes (scrape windows for CI/cron)")
     args = ap.parse_args()
     if args.fleet and args.dispatch == "off":
         # a fleet-less run would silently neither warm-start nor push
@@ -92,6 +111,28 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     params = lm.init_params(cfg, key)
     log = TraceCollector(capacity=args.trace_capacity)
+    # metrics plane: always attached (near-zero cost, exact counts even under
+    # shedding); the controller only runs when explicitly asked for, so plain
+    # traced runs keep today's always-on capture behaviour
+    from repro.metrics import (
+        DEFAULT_BUDGET_PCT,
+        AdaptiveController,
+        MetricsPlane,
+        serve_metrics,
+    )
+
+    plane = MetricsPlane(log)
+    controller = mserver = None
+    if args.metrics_port is not None or args.trace_overhead_budget_pct is not None:
+        budget = (DEFAULT_BUDGET_PCT if args.trace_overhead_budget_pct is None
+                  else args.trace_overhead_budget_pct)
+        controller = AdaptiveController(log, plane.registry,
+                                        budget_pct=budget).start()
+    if args.metrics_port is not None:
+        mserver = serve_metrics(plane, port=args.metrics_port)
+        import sys
+
+        print(f"metrics: {mserver.url}/metrics", file=sys.stderr)
     dispatcher = None
     aged = []
     if args.dispatch != "off":
@@ -122,6 +163,7 @@ def main() -> None:
             meta=run_meta,
             store_provider=(lambda: dispatcher.store) if dispatcher is not None else None,
             fleet_push=pusher.push if pusher is not None else None,
+            metrics_provider=plane.snapshot,
         ).attach(log)
     eng = Engine(
         cfg,
@@ -134,6 +176,7 @@ def main() -> None:
         ),
         log=log,
         dispatcher=dispatcher,
+        metrics=plane.registry,
     )
     rng = np.random.default_rng(args.seed)
     t0 = time.time()
@@ -162,6 +205,10 @@ def main() -> None:
         if args.profile_in:
             rec["profile_in"] = args.profile_in
             rec["profile_aged_out"] = len(aged)
+    if controller is not None:
+        controller.stop()  # final overhead reading lands in the gauges
+        rec["trace_controller"] = controller.snapshot()
+    rec["metrics"] = plane.summary()
     trace_stats = log.stats()  # stats() resolves spans; compute once
     rec["trace"] = trace_stats
     if stream is not None:
@@ -174,7 +221,10 @@ def main() -> None:
     if fleet_rec is not None:
         rec["fleet"] = fleet_rec
     if args.trace_out:
-        sess = Session.capture(log, dispatcher=dispatcher, meta=run_meta)
+        sess = Session.capture(log, dispatcher=dispatcher,
+                               meta={**run_meta, "metrics": plane.snapshot(),
+                                     "drops": log.drop_counters()},
+                               collector_stats=trace_stats)
         rec["trace_out"] = sess.save(args.trace_out)
     if args.profile_out and dispatcher is not None:
         doc = json.loads(dispatcher.store.to_json())
@@ -185,7 +235,13 @@ def main() -> None:
         with open(args.profile_out, "w") as f:
             json.dump(doc, f, indent=1)
         rec["profile_out"] = args.profile_out
-    print(json.dumps(rec))
+    print(json.dumps(rec), flush=True)
+    if mserver is not None:
+        if args.metrics_linger_s > 0:
+            # the run JSON is already out (flushed): scrapers poll for it,
+            # then hit /metrics while we linger
+            time.sleep(args.metrics_linger_s)
+        mserver.stop()
 
 
 if __name__ == "__main__":

@@ -100,6 +100,15 @@ def main() -> None:
                          "(repeatable; multiple files are merged)")
     ap.add_argument("--profile-out", default=None, metavar="PATH",
                     help="write the measured ProfileStore for the next run")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus /metrics on this port while the "
+                         "run is live (0 picks a free port)")
+    ap.add_argument("--trace-overhead-budget-pct", type=float, default=None,
+                    metavar="PCT",
+                    help="adaptive tracing: duty-cycle span capture to keep "
+                         "self-measured record-path overhead under PCT%% "
+                         "(0 = always-on: measure, never shed; default 5 "
+                         "when --metrics-port is given)")
     args = ap.parse_args()
     if args.fleet and args.dispatch == "off":
         # a fleet-less run would silently neither warm-start nor push
@@ -177,6 +186,27 @@ def main() -> None:
         log = TraceCollector(capacity=args.trace_capacity)
         if dispatcher is not None:
             dispatcher.log = log
+        from repro.metrics import (
+            DEFAULT_BUDGET_PCT,
+            AdaptiveController,
+            MetricsPlane,
+            serve_metrics,
+        )
+
+        plane = MetricsPlane(log)
+        controller = mserver = None
+        if (args.metrics_port is not None
+                or args.trace_overhead_budget_pct is not None):
+            budget = (DEFAULT_BUDGET_PCT
+                      if args.trace_overhead_budget_pct is None
+                      else args.trace_overhead_budget_pct)
+            controller = AdaptiveController(log, plane.registry,
+                                            budget_pct=budget).start()
+        if args.metrics_port is not None:
+            import sys
+
+            mserver = serve_metrics(plane, port=args.metrics_port)
+            print(f"metrics: {mserver.url}/metrics", file=sys.stderr)
         stream = None
         if args.trace_dir:
             stream = StreamingSession(
@@ -186,6 +216,7 @@ def main() -> None:
                 meta=run_meta,
                 store_provider=(lambda: dispatcher.store) if dispatcher is not None else None,
                 fleet_push=pusher.push if pusher is not None else None,
+                metrics_provider=plane.snapshot,
             ).attach(log)
         fail_at = tuple(int(s) for s in args.fail_at.split(",") if s)
         sup = Supervisor(
@@ -230,6 +261,10 @@ def main() -> None:
         if args.profile_in:
             rec["profile_in"] = args.profile_in
             rec["profile_aged_out"] = len(aged)
+    if controller is not None:
+        controller.stop()  # final overhead reading lands in the gauges
+        rec["trace_controller"] = controller.snapshot()
+    rec["metrics"] = plane.summary()
     trace_stats = log.stats()  # stats() resolves spans; compute once
     rec["trace"] = trace_stats
     if stream is not None:
@@ -242,7 +277,10 @@ def main() -> None:
     if fleet_rec is not None:
         rec["fleet"] = fleet_rec
     if args.trace_out:
-        sess = Session.capture(log, dispatcher=dispatcher, meta=run_meta)
+        sess = Session.capture(log, dispatcher=dispatcher,
+                               meta={**run_meta, "metrics": plane.snapshot(),
+                                     "drops": log.drop_counters()},
+                               collector_stats=trace_stats)
         rec["trace_out"] = sess.save(args.trace_out)
     if args.profile_out and dispatcher is not None:
         doc = json.loads(dispatcher.store.to_json())
@@ -253,7 +291,9 @@ def main() -> None:
         with open(args.profile_out, "w") as f:
             json.dump(doc, f, indent=1)
         rec["profile_out"] = args.profile_out
-    print(json.dumps(rec))
+    print(json.dumps(rec), flush=True)
+    if mserver is not None:
+        mserver.stop()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""repro.metrics — live metrics plane derived from the trace stream.
+
+Counters/gauges/fixed-bucket histograms (:mod:`.registry`), a trace-event
+sink that keeps them current (:mod:`.sink`), an adaptive sampling controller
+that bounds self-measured tracing overhead (:mod:`.controller`) and a stdlib
+HTTP scrape endpoint (:mod:`.http`).
+"""
+from repro.metrics.controller import (
+    DEFAULT_BUDGET_PCT,
+    AdaptiveController,
+    calibrate_noop,
+)
+from repro.metrics.http import MetricsHTTPServer, serve_metrics
+from repro.metrics.registry import (
+    DEFAULT_BUCKETS_MS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.metrics.sink import TIMED_UNITS, MetricsPlane, MetricsSink
+
+__all__ = [
+    "DEFAULT_BUCKETS_MS",
+    "DEFAULT_BUDGET_PCT",
+    "TIMED_UNITS",
+    "AdaptiveController",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsHTTPServer",
+    "MetricsPlane",
+    "MetricsRegistry",
+    "MetricsSink",
+    "calibrate_noop",
+    "serve_metrics",
+]

@@ -192,5 +192,9 @@ class Supervisor:
                 "events": len(self.log),
                 "dropped": self.log.dropped,
                 "capacity": self.log.maxlen,
+                # cheap per-track/shed counters when the log is a collector
+                # (no span resolution: run() may be mid-restart churn)
+                **(self.log.drop_counters()
+                   if hasattr(self.log, "drop_counters") else {}),
             },
         }

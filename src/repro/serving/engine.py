@@ -61,12 +61,22 @@ class Engine:
         *,
         log: Optional[EventLog] = None,
         dispatcher: Optional[Dispatcher] = None,
+        metrics: Optional[Any] = None,
     ) -> None:
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.log = GLOBAL_LOG if log is None else log
         self.dispatcher = dispatcher
+        # live occupancy gauges (a repro.metrics MetricsRegistry): queue depth
+        # and decode-slot usage are states, not events — the trace can't
+        # answer "how full is the batch right now" without replaying it
+        self._g_queue = self._g_slots = None
+        if metrics is not None:
+            self._g_queue = metrics.gauge(
+                "repro_serve_queue_depth", "requests waiting for a decode slot")
+            self._g_slots = metrics.gauge(
+                "repro_serve_active_slots", "occupied decode slots")
         B, S = scfg.max_batch, scfg.max_seq
         self.caches = lm.init_caches(cfg, B, S)
         self.cur_pos = np.zeros(B, np.int32)  # next position per slot
@@ -138,6 +148,8 @@ class Engine:
         # the parent captured at submit keeps the request under the driver's
         # run span even though its exit lands ticks later on another path
         self.log.record("spawn", "request", req.rid, span=req.span, parent=req.parent)
+        if self._g_queue is not None:
+            self._g_queue.set(len(self.queue))
         return req.rid
 
     def run_to_completion(self) -> dict[int, list[int]]:
@@ -175,6 +187,9 @@ class Engine:
                 req.out.append(int(first))
                 self.cur_pos[slot] = len(req.prompt)
             self.active[slot] = req
+        if self._g_queue is not None:
+            self._g_queue.set(len(self.queue))
+            self._g_slots.set(sum(r is not None for r in self.active))
 
     def _decode_tick(self) -> list[Request]:
         live = [r for r in self.active if r is not None]
@@ -204,6 +219,8 @@ class Engine:
                 self.active[r.slot] = None
                 self.log.record("exit", "request", r.rid, span=r.span, parent=r.parent)
                 finished.append(r)
+        if finished and self._g_slots is not None:
+            self._g_slots.set(sum(r is not None for r in self.active))
         return finished
 
     def _sample(self, logits: jax.Array) -> jax.Array:

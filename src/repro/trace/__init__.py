@@ -29,9 +29,16 @@ from repro.trace.session import (
     diff_sessions,
     load_profile_store,
     load_profile_stores,
+    path_diff,
+    path_regressions,
     session_regressions,
 )
-from repro.trace.stream import StreamingSession, load_any, load_stream
+from repro.trace.stream import (
+    StreamingSession,
+    load_any,
+    load_metrics_timeline,
+    load_stream,
+)
 
 __all__ = [
     "Span",
@@ -54,8 +61,11 @@ __all__ = [
     "diff_artifacts",
     "diff_sessions",
     "load_any",
+    "load_metrics_timeline",
     "load_profile_store",
     "load_profile_stores",
     "load_stream",
+    "path_diff",
+    "path_regressions",
     "session_regressions",
 ]

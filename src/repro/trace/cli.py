@@ -40,9 +40,17 @@ from repro.trace.session import (
     diff_artifacts,
     diff_sessions,
     is_session,
+    path_diff,
+    path_regressions,
     session_regressions,
 )
-from repro.trace.stream import load_any, load_stream, tail_stream
+from repro.trace.stream import (
+    MANIFEST_NAME,
+    load_any,
+    load_metrics_timeline,
+    load_stream,
+    tail_stream,
+)
 
 EXIT_REGRESSION = 3  # distinct from argparse (2) and generic failure (1)
 
@@ -58,6 +66,11 @@ def _print_report(rep: dict[str, Any]) -> None:
     print(f"events   {rep['events']}  (dropped by ring: {rep['dropped']})"
           + (f"  ({rep['truncated_spans']} truncated spans excluded)"
              if rep.get("truncated_spans") else ""))
+    dbt = {k or "main": v for k, v in (rep.get("dropped_by_track") or {}).items() if v}
+    if dbt:
+        print(f"WARNING: ring drops by track: {dbt}")
+    if rep.get("sampled_out"):
+        print(f"sampled out (adaptive capture shedding): {rep['sampled_out']} events")
     if rep["latency"]:
         print(f"\n{'track/name':<28}{'count':>7}{'mean_ms':>10}{'min_ms':>10}{'max_ms':>10}")
         for key, row in sorted(rep["latency"].items()):
@@ -166,6 +179,88 @@ def cmd_push_profiles(args: argparse.Namespace) -> int:
     return 0
 
 
+def _fmt_series(m: dict[str, Any]) -> str:
+    labels = m.get("labels") or {}
+    ltxt = ("{" + ",".join(f"{k}={v}" for k, v in sorted(labels.items())) + "}"
+            if labels else "")
+    return f"{m.get('name')}{ltxt}"
+
+
+def _print_snapshot(snap: dict[str, Any]) -> None:
+    hists = [m for m in snap.get("metrics", []) if m.get("kind") == "histogram"]
+    scalars = [m for m in snap.get("metrics", []) if m.get("kind") != "histogram"]
+    if scalars:
+        width = max(len(_fmt_series(m)) for m in scalars)
+        for m in scalars:
+            print(f"  {_fmt_series(m):<{width}}  {m.get('value'):g}")
+    if hists:
+        print(f"\n  {'histogram':<44}{'count':>8}{'p50_ms':>10}{'p95_ms':>10}"
+              f"{'p99_ms':>10}")
+        for m in hists:
+            print(f"  {_fmt_series(m):<44}{m.get('count', 0):>8}"
+                  + _fmt_ms(m.get("p50")) + _fmt_ms(m.get("p95"))
+                  + _fmt_ms(m.get("p99")))
+
+
+def cmd_metrics(args: argparse.Namespace) -> int:
+    """Final + per-rotation metric snapshots of a recorded run.
+
+    Reads only the manifest / ``metrics.jsonl`` sidecar (or session meta) —
+    never the event stream — so it is cheap even on huge traces.
+    """
+    final: Any = None
+    timeline: list[dict[str, Any]] = []
+    drops: Any = None
+    if os.path.isdir(args.session):
+        mpath = os.path.join(args.session, MANIFEST_NAME)
+        manifest: dict[str, Any] = {}
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                manifest = json.load(f)
+        final = manifest.get("metrics")
+        drops = manifest.get("drops")
+        timeline = load_metrics_timeline(args.session)
+    else:
+        with open(args.session) as f:
+            raw = json.load(f)
+        if not is_session(raw):
+            print(f"error: {args.session} is not a trace session", file=sys.stderr)
+            return 2
+        meta = raw.get("meta", {})
+        final = meta.get("metrics")
+        drops = meta.get("drops")
+        timeline = meta.get("metrics_timeline") or []
+    if final is None and timeline:
+        final = timeline[-1].get("metrics")
+    if args.json:
+        print(json.dumps({"final": final, "timeline": timeline, "drops": drops},
+                         indent=1))
+        return 0
+    if final is None:
+        print("no metric snapshots recorded (run with the metrics plane "
+              "enabled: --metrics-port and/or --trace-overhead-budget-pct)",
+              file=sys.stderr)
+        return 1
+    if timeline:
+        print(f"timeline  {len(timeline)} rotation snapshot(s)")
+        for row in timeline:
+            series = row.get("metrics", {}).get("metrics", [])
+            events = sum(m.get("value", 0) for m in series
+                         if m.get("name") == "repro_trace_events_total")
+            overhead = next((m.get("value") for m in series
+                             if m.get("name") == "repro_trace_overhead_pct"), None)
+            print(f"  t={row.get('t', 0):.3f}  segment={row.get('segment')}"
+                  f"  events={events:g}"
+                  + (f"  overhead_pct={overhead:g}" if overhead is not None else ""))
+    print("\nfinal snapshot:")
+    _print_snapshot(final)
+    if drops:
+        print(f"\nlosses: dropped={drops.get('dropped', 0)} "
+              f"sampled_out={drops.get('sampled_out', 0)} "
+              f"by_track={drops.get('by_track', {})}")
+    return 0
+
+
 def _load_raw(path: str) -> dict[str, Any]:
     """A session/artifact JSON dict from a file — or a segment directory."""
     if os.path.isdir(path):
@@ -199,11 +294,20 @@ def cmd_diff(args: argparse.Namespace) -> int:
                   f"JSON ({other}); pass two sessions or two bench artifacts")
         print(ap_err, file=sys.stderr)
         return 2
+    if args.by_path and not (is_session(raw_a) and is_session(raw_b)):
+        print("--by-path needs two trace sessions (bench artifacts have no "
+              "span tree)", file=sys.stderr)
+        return 2
     regressions: list[dict[str, Any]] = []
     if is_session(raw_a) and is_session(raw_b):
-        out = diff_sessions(Session.from_dict(raw_a), Session.from_dict(raw_b))
+        sa, sb = Session.from_dict(raw_a), Session.from_dict(raw_b)
+        out = diff_sessions(sa, sb)
+        if args.by_path:
+            out["by_path"] = path_diff(sa, sb, args.path_depth)
         if args.fail_over_pct is not None:
             regressions = session_regressions(out, args.fail_over_pct)
+            if args.by_path:
+                regressions += path_regressions(out["by_path"], args.fail_over_pct)
         if args.json:
             print(json.dumps({**out, "regressions": regressions}, indent=1))
         else:
@@ -216,6 +320,18 @@ def cmd_diff(args: argparse.Namespace) -> int:
                     else:
                         d = row["delta_pct"]
                         print(f"{key:<28}" + _fmt_ms(row["a_mean_ms"]) + _fmt_ms(row["b_mean_ms"])
+                              + (f"{d:>+9.1f}" if d is not None else f"{'-':>9}"))
+            if args.by_path and out["by_path"]:
+                print(f"\n{'span-tree path (exclusive)':<44}{'a_mean_ms':>10}"
+                      f"{'b_mean_ms':>10}{'delta_%':>9}")
+                for row in out["by_path"]:
+                    if "only_in" in row:
+                        print(f"{row['path']:<44}  (only in {row['only_in']})")
+                    else:
+                        d = row["delta_pct"]
+                        print(f"{row['path']:<44}"
+                              + _fmt_ms(row["a_mean_exclusive_ms"])
+                              + _fmt_ms(row["b_mean_exclusive_ms"])
                               + (f"{d:>+9.1f}" if d is not None else f"{'-':>9}"))
             changed = {op: r for op, r in out["dispatch_choices"].items() if r["changed"]}
             if out["dispatch_choices"]:
@@ -305,10 +421,24 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("a", help="session JSON, segment directory, or bench artifact")
     p.add_argument("b", help="session JSON, segment directory, or bench artifact")
     p.add_argument("--json", action="store_true")
+    p.add_argument("--by-path", action="store_true",
+                   help="also diff mean exclusive time per span-tree path, "
+                        "attributing a regression to the node that grew "
+                        "(sessions only)")
+    p.add_argument("--path-depth", type=int, default=4, metavar="N",
+                   help="span-tree path depth cap for --by-path (deeper "
+                        "nodes fold into their ancestor)")
     p.add_argument("--fail-over-pct", type=float, default=None, metavar="PCT",
                    help="exit non-zero if any latency grew (or throughput "
-                        "shrank) by more than PCT%% — the CI regression gate")
+                        "shrank) by more than PCT%% — the CI regression gate; "
+                        "with --by-path, per-path exclusive regressions gate too")
     p.set_defaults(fn=cmd_diff)
+
+    p = sub.add_parser("metrics",
+                       help="print a run's final + per-rotation metric snapshots")
+    p.add_argument("session", help="session JSON or streaming segment directory")
+    p.add_argument("--json", action="store_true", help="machine-readable output")
+    p.set_defaults(fn=cmd_metrics)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -16,10 +16,20 @@ write into a bounded collector unchanged.  On top of the raw log it adds:
   tiny-but-precious dispatch or checkpoint events (one global ``maxlen``
   evicts exactly the wrong things under skewed load).  By default the
   ``dispatch`` and ``checkpoint`` tracks are reserved;
-* **streaming sink** — ``set_sink(fn)`` invokes ``fn(event)`` on every
-  record *before* any ring eviction, which is how a
+* **streaming sinks** — ``set_sink(fn)`` invokes ``fn(event)`` on every
+  *captured* record before any ring eviction, which is how a
   :class:`~repro.trace.stream.StreamingSession` persists the full event
-  stream even beyond ring capacity;
+  stream even beyond ring capacity; ``add_sink(fn, sampled=False)`` fans in
+  extra sinks that see **every** event including sampled-out ones (the
+  metrics plane counts what the rings shed);
+* **adaptive sampling gate** — ``set_sample_rate(r)`` duty-cycles span
+  capture: non-essential events are admitted at rate ``r`` by an error
+  accumulator, suppressed spawns remember their span id so the matching
+  exit is suppressed too (pairing never tears), and dispatch / checkpoint /
+  run / controller tracks are never shed.  Driven by
+  :class:`repro.metrics.controller.AdaptiveController`, which reads the
+  record-path self-timing (records are wall-clocked end-to-end, every
+  ``TIMING_EVERY``-th call) via ``timing_snapshot()``;
 * **closed spans** — spawn/exit pairs resolved into ``Span`` records (by span
   id / payload identity, interleaving-safe) carrying parent links, the unit
   every exporter in :mod:`repro.trace.export` consumes;
@@ -53,11 +63,27 @@ TRACK_OF: dict[str, str] = {
     "checkpoint": "checkpoint",
     "restart": "checkpoint",
     "elastic_resize": "checkpoint",
+    "controller": "controller",
 }
 
 # Host tracks order before device tracks (``device:<name>``, sorted after the
 # canonical set) so viewers render host rows above their device rows.
-TRACKS = ("run", "step", "microbatch", "request", "checkpoint", "dispatch", "other")
+TRACKS = ("run", "step", "microbatch", "request", "checkpoint", "dispatch",
+          "controller", "other")
+
+# Tracks the sampling gate never sheds: rare, tiny, and load-bearing — the
+# run envelope, dispatch/warm-start analysis, recovery lifecycle, and the
+# controller's own decision trail.  Device tracks are also exempt (they are
+# merged post-hoc and already rate-limited at their source).
+ESSENTIAL_TRACKS = frozenset({"run", "dispatch", "checkpoint", "controller"})
+
+# Every Nth record() is timed end-to-end (event build + ring + sinks).  The
+# default times EVERY call: two perf_counter reads (~100 ns) against a
+# multi-µs record path, and sparse sampling aliases badly with periodic
+# in-sink costs — a streaming session fsyncing every 64 events lands the
+# rotation on exactly the timed record when N is also 64, extrapolating one
+# fsync to the whole stream.
+TIMING_EVERY = 1
 
 
 def default_track(e: Event) -> str:
@@ -72,7 +98,9 @@ def default_track(e: Event) -> str:
 # Reserved per-track ring sizes: dispatch decisions and checkpoint lifecycle
 # events are rare and small but drive warm-start + recovery analysis — they
 # must survive a request-span flood that wraps the main ring many times over.
-DEFAULT_TRACK_CAPACITY: dict[str, int] = {"dispatch": 4096, "checkpoint": 1024}
+DEFAULT_TRACK_CAPACITY: dict[str, int] = {
+    "dispatch": 4096, "checkpoint": 1024, "controller": 1024,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,19 +162,55 @@ class TraceCollector(EventLog):
         self._ring_dropped: dict[str, int] = {t: 0 for t in self._rings}
         self._sink = sink
         self._sink_error: Optional[str] = None
+        self._extra_sinks: list[tuple[Callable[[Event], None], bool]] = []
+        # sampling gate state (all under self._lock)
+        self._sample_rate = 1.0
+        self._duty = 0.0
+        self._suppressed: set[int] = set()
+        self._sampled_out = 0
+        # record-path self-timing (controller feedback signal)
+        self._rec_count = 0
+        self._rec_marked = 0
+        self._timed_count = 0
+        self._timed_total_s = 0.0
 
-    # -- streaming sink ------------------------------------------------------
+    # -- streaming sinks -----------------------------------------------------
 
     def set_sink(self, sink: Optional[Callable[[Event], None]]) -> None:
-        """Install a per-event callback (e.g. ``StreamingSession.emit``).
+        """Install the primary per-event callback (``StreamingSession.emit``).
 
-        The sink sees every event exactly once, before ring eviction, so a
-        durable stream is a superset of the in-memory ring — provided the
-        stream is closed only after all recording threads have quiesced (the
-        sink runs outside the collector lock, so an in-flight record() racing
-        ``StreamingSession.close()`` would be dropped by the sealed stream;
-        every driver closes after its run loop has fully joined)."""
+        The sink sees every *captured* event exactly once, before ring
+        eviction, so a durable stream is a superset of the in-memory ring —
+        provided the stream is closed only after all recording threads have
+        quiesced (the sink runs outside the collector lock, so an in-flight
+        record() racing ``StreamingSession.close()`` would be dropped by the
+        sealed stream; every driver closes after its run loop has fully
+        joined)."""
         self._sink = sink
+
+    def add_sink(self, sink: Callable[[Event], None], *, sampled: bool = True) -> None:
+        """Fan in an additional sink.
+
+        ``sampled=True`` sinks mirror the primary slot (captured events
+        only); ``sampled=False`` sinks see every event including ones the
+        sampling gate sheds — the metrics plane attaches this way so
+        counters stay exact while capture is duty-cycled."""
+        self._extra_sinks.append((sink, sampled))
+
+    def remove_sink(self, sink: Callable[[Event], None]) -> None:
+        self._extra_sinks = [(s, f) for s, f in self._extra_sinks if s is not sink]
+
+    # -- sampling gate -------------------------------------------------------
+
+    @property
+    def sample_rate(self) -> float:
+        with self._lock:
+            return self._sample_rate
+
+    def set_sample_rate(self, rate: float) -> None:
+        """Set the capture duty cycle in [0, 1]; 1.0 = capture everything."""
+        with self._lock:
+            self._sample_rate = min(1.0, max(0.0, float(rate)))
 
     # -- recording (track-aware) ---------------------------------------------
 
@@ -167,22 +231,62 @@ class TraceCollector(EventLog):
         span: int = 0,
         parent: Optional[int] = None,
     ) -> None:
+        # racy read of _rec_count is fine: timing needs ~1/TIMING_EVERY calls
+        t0 = (time.perf_counter()
+              if TIMING_EVERY == 1 or self._rec_count % TIMING_EVERY == 0
+              else None)
         if parent is None:
             parent = current_span()
         ev = Event(time.monotonic(), kind, name, payload, span, parent)
         track = self._track_for(kind, name, payload)
         ring = self._rings.get(track)
         with self._lock:
-            if ring is not None:
-                if ring.maxlen is not None and len(ring) == ring.maxlen:
-                    self._ring_dropped[track] += 1
-                ring.append(ev)
-            else:
-                if self._events.maxlen is not None and len(self._events) == self._events.maxlen:
-                    self._dropped += 1
-                self._events.append(ev)
+            self._rec_count += 1
+            captured = True
+            if kind == "exit" and span and span in self._suppressed:
+                # spawn was shed: shed the exit too, whatever the gate says now
+                self._suppressed.discard(span)
+                self._sampled_out += 1
+                captured = False
+            elif (self._sample_rate < 1.0
+                  and track not in ESSENTIAL_TRACKS
+                  and not track.startswith("device")
+                  and not (kind == "exit" and span)):
+                # exits of captured spans always pass (pairing never tears);
+                # everything else goes through the duty-cycle accumulator
+                self._duty += self._sample_rate
+                if self._duty >= 1.0:
+                    self._duty -= 1.0
+                else:
+                    self._sampled_out += 1
+                    captured = False
+                    if kind == "spawn" and span:
+                        if len(self._suppressed) >= 65536:
+                            self._suppressed.pop()
+                        self._suppressed.add(span)
+            if captured:
+                if ring is not None:
+                    if ring.maxlen is not None and len(ring) == ring.maxlen:
+                        self._ring_dropped[track] += 1
+                    ring.append(ev)
+                else:
+                    if self._events.maxlen is not None and len(self._events) == self._events.maxlen:
+                        self._dropped += 1
+                    self._events.append(ev)
+        for extra, wants_sampled in list(self._extra_sinks):
+            if wants_sampled and not captured:
+                continue
+            try:  # outside the lock: sink I/O must not block writers
+                extra(ev)
+            except Exception as exc:
+                self.remove_sink(extra)
+                self._sink_error = f"{type(exc).__name__}: {exc}"
+                import sys
+
+                print(f"trace sink detached after error: {self._sink_error}",
+                      file=sys.stderr)
         sink = self._sink
-        if sink is not None:  # outside the lock: sink I/O must not block writers
+        if captured and sink is not None:
             try:
                 sink(ev)
             except Exception as exc:
@@ -194,6 +298,29 @@ class TraceCollector(EventLog):
 
                 print(f"trace sink detached after error: {self._sink_error}",
                       file=sys.stderr)
+        if t0 is not None:
+            dt = time.perf_counter() - t0
+            with self._lock:
+                self._timed_count += 1
+                self._timed_total_s += dt
+
+    def timing_snapshot(self) -> dict[str, Any]:
+        """Read-and-reset the record-path self-timing accumulators.
+
+        ``timed`` calls were wall-clocked end-to-end out of ``records`` total
+        record() calls since the last snapshot — the adaptive controller
+        multiplies the per-call cost back up by ``records`` to price the
+        whole stream."""
+        with self._lock:
+            out = {
+                "timed": self._timed_count,
+                "timed_s": self._timed_total_s,
+                "records": self._rec_count - self._rec_marked,
+            }
+            self._timed_count = 0
+            self._timed_total_s = 0.0
+            self._rec_marked = self._rec_count
+        return out
 
     def events(self, kind: str | None = None, name: str | None = None) -> list[Event]:
         with self._lock:
@@ -230,6 +357,22 @@ class TraceCollector(EventLog):
             out[track] = out.get(track, 0) + n
         return out
 
+    def drop_counters(self) -> dict[str, Any]:
+        """Cheap loss counters (no span resolution): safe to poll mid-run.
+
+        Unlike :meth:`dropped_by_track` this never walks the event stream,
+        so the metrics plane and streaming-session manifests can refresh it
+        on every scrape/rotation without perturbing the run."""
+        with self._lock:
+            by_track = {t: n for t, n in self._ring_dropped.items() if n}
+            if self._dropped:
+                by_track[""] = self._dropped
+            return {
+                "dropped": self._dropped + sum(self._ring_dropped.values()),
+                "sampled_out": self._sampled_out,
+                "by_track": by_track,
+            }
+
     def clear(self) -> None:
         with self._lock:
             self._events.clear()
@@ -237,6 +380,9 @@ class TraceCollector(EventLog):
             for ring in self._rings.values():
                 ring.clear()
             self._ring_dropped = {t: 0 for t in self._rings}
+            self._duty = 0.0
+            self._suppressed.clear()
+            self._sampled_out = 0
 
     def to_json(self) -> str:
         import json
@@ -277,6 +423,8 @@ class TraceCollector(EventLog):
         per_track = {t: len(evs) for t, evs in self.tracks().items()}
         with self._lock:
             track_capacity = {t: r.maxlen for t, r in self._rings.items()}
+            sampled_out = self._sampled_out
+            sample_rate = self._sample_rate
         return {
             "events": len(self),
             "capacity": self.maxlen,
@@ -284,6 +432,8 @@ class TraceCollector(EventLog):
             "per_track": per_track,
             "track_capacity": track_capacity,
             "dropped_by_track": self.dropped_by_track(),
+            "sampled_out": sampled_out,
+            "sample_rate": sample_rate,
             "sink_error": self._sink_error,
         }
 

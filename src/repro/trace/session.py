@@ -78,6 +78,7 @@ class Session:
     decisions: list[dict[str, Any]] = dataclasses.field(default_factory=list)
     store: Optional[ProfileStore] = None
     chip: Optional[dict[str, Any]] = None
+    collector_stats: Optional[dict[str, Any]] = None
 
     # -- construction --------------------------------------------------------
 
@@ -89,12 +90,15 @@ class Session:
         dispatcher: Any = None,
         store: Optional[ProfileStore] = None,
         meta: Optional[dict[str, Any]] = None,
+        collector_stats: Optional[dict[str, Any]] = None,
     ) -> "Session":
         """Snapshot a live run.
 
         ``dispatcher`` (a :class:`repro.dispatch.dispatcher.Dispatcher`)
         contributes its decisions, profile store and chip model; any of the
-        three can also be absent (trace-only runs).
+        three can also be absent (trace-only runs).  ``collector_stats``
+        (``TraceCollector.stats()``) rides along so drop accounting survives
+        serialisation; when omitted it is pulled from the log if available.
         """
         decisions: list[dict[str, Any]] = []
         chip = None
@@ -102,6 +106,10 @@ class Session:
             decisions = [d.payload() for d in dispatcher.decisions]
             store = store if store is not None else dispatcher.store
             chip = dataclasses.asdict(dispatcher.chip)
+        if collector_stats is None:
+            stats_fn = getattr(log, "stats", None)
+            if callable(stats_fn):
+                collector_stats = stats_fn()
         return cls(
             meta={"schema": SESSION_SCHEMA, **run_metadata(meta)},
             events=log.events(),
@@ -110,6 +118,7 @@ class Session:
             decisions=decisions,
             store=store,
             chip=chip,
+            collector_stats=collector_stats,
         )
 
     # -- persistence ---------------------------------------------------------
@@ -120,6 +129,7 @@ class Session:
             "trace": {
                 "dropped": self.dropped,
                 "capacity": self.capacity,
+                "stats": self.collector_stats,
                 "events": [dataclasses.asdict(e) for e in self.events],
             },
             "dispatch": {
@@ -147,6 +157,7 @@ class Session:
             decisions=disp.get("decisions", []),
             store=ProfileStore.from_json(json.dumps(profiles)) if profiles else None,
             chip=disp.get("chip"),
+            collector_stats=trace.get("stats"),
         )
 
     @classmethod
@@ -194,6 +205,37 @@ class Session:
         visit(self.span_tree(), 0)
         return rows
 
+    def path_report(self, max_depth: int = 4) -> dict[str, dict[str, Any]]:
+        """Exclusive time aggregated per span-tree *path* (depth-capped).
+
+        A path is the ``/``-joined chain of span names from a root down
+        (``request/prefill/matmul``); nodes deeper than ``max_depth`` fold
+        their exclusive time into their depth-capped ancestor, so totals are
+        conserved whatever the cap.  Truncated spans contribute their
+        (force-closed) children's structure but no time of their own — a cut
+        exit is not a measurement.
+        """
+        out: dict[str, dict[str, Any]] = {}
+
+        def visit(node: SpanNode, names: tuple[str, ...]) -> None:
+            names = names + (node.span.name,)
+            capped = names[:max_depth]
+            path = "/".join(capped)
+            row = out.setdefault(path, {"count": 0, "exclusive_ms": 0.0,
+                                        "truncated": 0, "depth": len(capped)})
+            if node.span.truncated:
+                row["truncated"] += 1
+            else:
+                row["exclusive_ms"] += node.exclusive * 1e3
+                if len(names) <= max_depth:
+                    row["count"] += 1
+            for c in node.children:
+                visit(c, names)
+
+        for root in self.span_tree():
+            visit(root, ())
+        return {p: r for p, r in out.items() if r["count"] or r["truncated"]}
+
     def report(self) -> dict[str, Any]:
         """Deterministic per-op / per-backend tables (the CLI renders these).
 
@@ -239,10 +281,16 @@ class Session:
             for cell in backends.values():
                 cell["mean_ms"] = cell["total_ms"] / cell["measured"] if cell["measured"] else None
 
+        cstats = self.collector_stats or {}
         return {
             "meta": {k: self.meta.get(k) for k in ("schema", "git_sha", "created_unix")},
             "events": len(self.events),
             "dropped": self.dropped,
+            # loss accounting at top level: a report whose rings shed events
+            # should say so up front, not three dicts deep in session meta
+            "dropped_by_track": {k: v for k, v in
+                                 (cstats.get("dropped_by_track") or {}).items() if v},
+            "sampled_out": cstats.get("sampled_out", 0),
             "truncated_spans": truncated,
             "latency": lat,
             "dispatch": {
@@ -332,6 +380,54 @@ def diff_sessions(a: Session, b: Session) -> dict[str, Any]:
         "dispatch_choices": choices,
         "by_source": {"a": ra["dispatch"]["by_source"], "b": rb["dispatch"]["by_source"]},
     }
+
+
+def path_diff(a: Session, b: Session, max_depth: int = 4) -> list[dict[str, Any]]:
+    """Diff mean exclusive time per span-tree path (``diff --by-path``).
+
+    Attributes a regression to the tree node that actually grew rather than
+    the whole request: a slower ``request/prefill/matmul`` shows up on that
+    path, while ``request`` itself (exclusive of children) stays flat.
+    Rows are sorted most-changed first; paths present on only one side are
+    reported but carry no delta.
+    """
+    ra, rb = a.path_report(max_depth), b.path_report(max_depth)
+    rows: list[dict[str, Any]] = []
+    for path in sorted(set(ra) | set(rb)):
+        pa, pb = ra.get(path), rb.get(path)
+        if pa and pb and pa["count"] and pb["count"]:
+            ma = pa["exclusive_ms"] / pa["count"]
+            mb = pb["exclusive_ms"] / pb["count"]
+            rows.append({
+                "path": path,
+                "a_mean_exclusive_ms": ma,
+                "b_mean_exclusive_ms": mb,
+                "a_count": pa["count"],
+                "b_count": pb["count"],
+                "delta_pct": (mb / ma - 1.0) * 100 if ma else None,
+            })
+        else:
+            present = pa if pa else pb
+            rows.append({"path": path, "only_in": "a" if pa else "b",
+                         "count": present["count"] if present else 0})
+    rows.sort(key=lambda r: -(abs(r["delta_pct"])
+                              if isinstance(r.get("delta_pct"), (int, float))
+                              else -1.0))
+    return rows
+
+
+def path_regressions(
+    rows: list[dict[str, Any]], fail_over_pct: float
+) -> list[dict[str, Any]]:
+    """Regressed rows from a :func:`path_diff` (feeds the CI exit-3 gate)."""
+    regs: list[dict[str, Any]] = []
+    for r in rows:
+        d = r.get("delta_pct")
+        if isinstance(d, (int, float)) and d > fail_over_pct:
+            regs.append({"key": r["path"], "a": r["a_mean_exclusive_ms"],
+                         "b": r["b_mean_exclusive_ms"], "delta_pct": d,
+                         "kind": "path-exclusive"})
+    return regs
 
 
 def _numeric_leaves(obj: Any, prefix: str = "") -> dict[str, float]:

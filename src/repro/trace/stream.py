@@ -40,6 +40,7 @@ from repro.utils.io import atomic_write as _atomic_write
 STREAM_SCHEMA = "repro.trace.stream/v1"
 MANIFEST_NAME = "MANIFEST.json"
 PROFILES_NAME = "profiles.json"
+METRICS_NAME = "metrics.jsonl"
 SEGMENT_PREFIX = "segment-"
 OPEN_SUFFIX = ".open"
 
@@ -88,6 +89,8 @@ class StreamingSession:
         chip: Optional[dict[str, Any]] = None,
         store_provider: Optional[Callable[[], ProfileStore]] = None,
         fleet_push: Optional[Callable[[], Any]] = None,
+        metrics_provider: Optional[Callable[[], dict[str, Any]]] = None,
+        stats_provider: Optional[Callable[[], dict[str, Any]]] = None,
     ) -> None:
         if rotate_events < 1:
             raise ValueError(f"rotate_events must be >= 1, got {rotate_events}")
@@ -99,6 +102,8 @@ class StreamingSession:
         self.max_segments = max_segments
         self.store_provider = store_provider
         self.fleet_push = fleet_push
+        self.metrics_provider = metrics_provider
+        self.stats_provider = stats_provider
         if chip is None:
             from repro.hw.specs import default_chip
 
@@ -139,8 +144,16 @@ class StreamingSession:
     # -- wiring ---------------------------------------------------------------
 
     def attach(self, collector: Any) -> "StreamingSession":
-        """Register as the collector's event sink (returns self)."""
+        """Register as the collector's event sink (returns self).
+
+        Also adopts the collector's cheap loss counters
+        (:meth:`~repro.trace.collector.TraceCollector.drop_counters`) as the
+        manifest's ``drops`` provider unless one was passed explicitly, so
+        every rotation records up-to-date drop/shed totals for ``tail`` to
+        warn on."""
         collector.set_sink(self.emit)
+        if self.stats_provider is None:
+            self.stats_provider = getattr(collector, "drop_counters", None)
         return self
 
     def __enter__(self) -> "StreamingSession":
@@ -185,6 +198,7 @@ class StreamingSession:
         self._seg_index += 1
         self._prune_locked()
         self._snapshot_profiles_locked()
+        self._snapshot_metrics_locked(segment=name)
         self._write_manifest()
         self._fleet_push_locked()
 
@@ -256,6 +270,36 @@ class StreamingSession:
             print(f"trace stream: profile snapshot failed ({type(exc).__name__}: "
                   f"{exc}); segments unaffected", file=sys.stderr)
 
+    def _snapshot_metrics_locked(self, segment: Optional[str] = None) -> None:
+        """Refresh the manifest's drop counters and append the current metric
+        snapshot to ``metrics.jsonl`` (best effort, like profiles): one row
+        per rotation gives ``repro.trace metrics`` the run's metric timeline,
+        and the manifest always carries the latest snapshot + loss totals."""
+        import sys
+        import time as _time
+
+        if self.stats_provider is not None:
+            try:
+                drops = self.stats_provider()
+                if drops is not None:
+                    self._manifest["drops"] = drops
+            except Exception as exc:
+                print(f"trace stream: drop-counter refresh failed "
+                      f"({type(exc).__name__}: {exc})", file=sys.stderr)
+        if self.metrics_provider is None:
+            return
+        try:
+            snap = self.metrics_provider()
+            if snap is None:
+                return
+            self._manifest["metrics"] = snap
+            row = {"t": _time.time(), "segment": segment, "metrics": snap}
+            with open(os.path.join(self.path, METRICS_NAME), "a") as f:
+                f.write(json.dumps(row, default=repr) + "\n")
+        except Exception as exc:
+            print(f"trace stream: metrics snapshot failed ({type(exc).__name__}: "
+                  f"{exc}); segments unaffected", file=sys.stderr)
+
     # -- the streaming path ---------------------------------------------------
 
     def emit(self, event: Event) -> None:
@@ -295,9 +339,10 @@ class StreamingSession:
                 self._seg_file.close()
                 self._seg_file = None
                 os.unlink(os.path.join(self.path, name))
-            # final profile snapshot: samples recorded since the last
+            # final profile + metric snapshots: anything since the last
             # rotation must survive the run (and reach the fleet)
             self._snapshot_profiles_locked()
+            self._snapshot_metrics_locked(segment="final")
             self._fleet_push_locked(sync=True)
             self._manifest["closed"] = True
             self._manifest["total_events"] = self._total_events
@@ -384,6 +429,9 @@ def load_stream(path: str) -> Session:
     meta = {k: v for k, v in manifest.items()
             if k not in ("schema", "segments", "chip", "closed")}
     meta["schema"] = SESSION_SCHEMA
+    timeline = load_metrics_timeline(path)
+    if timeline:
+        meta["metrics_timeline"] = timeline
     meta["stream"] = {
         "dir": path,
         "schema": manifest.get("schema", STREAM_SCHEMA),
@@ -404,7 +452,27 @@ def load_stream(path: str) -> Session:
         decisions=decisions,
         store=store,
         chip=manifest.get("chip"),
+        collector_stats=collector_stats or None,
     )
+
+
+def load_metrics_timeline(path: str) -> list[dict[str, Any]]:
+    """Parse a session directory's per-rotation ``metrics.jsonl`` rows
+    (lenient: a torn tail line from a crash is skipped, not fatal)."""
+    mx = os.path.join(path, METRICS_NAME)
+    rows: list[dict[str, Any]] = []
+    if not os.path.exists(mx):
+        return rows
+    with open(mx) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return rows
 
 
 def load_any(path: str) -> Session:
@@ -484,6 +552,8 @@ class _Tailer:
         self.index = indices[0] if indices else 0
         self.offset = 0
         self.open_spans: dict[Any, tuple[float, int]] = {}
+        self.last_dropped = 0
+        self.last_sampled_out = 0
 
     def _paths(self, index: int) -> tuple[str, str]:
         name = os.path.join(self.path, f"{SEGMENT_PREFIX}{index:06d}.jsonl")
@@ -547,6 +617,31 @@ class _Tailer:
         except (FileNotFoundError, json.JSONDecodeError):
             return False
 
+    def drop_warning(self) -> Optional[str]:
+        """One-line warning when the manifest's loss counters grew since the
+        previous check (rotations refresh them): drops mean the stream is
+        complete but the in-memory rings are lossy — the reader should know
+        before trusting ring-derived reports."""
+        try:
+            with open(os.path.join(self.path, MANIFEST_NAME)) as f:
+                drops = json.load(f).get("drops") or {}
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+        dropped = int(drops.get("dropped") or 0)
+        sampled = int(drops.get("sampled_out") or 0)
+        if dropped <= self.last_dropped and sampled <= self.last_sampled_out:
+            return None
+        parts = []
+        if dropped > self.last_dropped:
+            by = {k or "main": v for k, v in (drops.get("by_track") or {}).items() if v}
+            parts.append(f"{dropped} events dropped by bounded rings "
+                         f"(+{dropped - self.last_dropped}) by_track={by}")
+        if sampled > self.last_sampled_out:
+            parts.append(f"{sampled} events shed by adaptive sampling "
+                         f"(+{sampled - self.last_sampled_out})")
+        self.last_dropped, self.last_sampled_out = dropped, sampled
+        return "# WARNING: " + "; ".join(parts)
+
 
 def tail_stream(path: str, *, once: bool = False, poll_s: float = 0.2,
                 out: Any = None) -> int:
@@ -569,12 +664,18 @@ def tail_stream(path: str, *, once: bool = False, poll_s: float = 0.2,
         while True:
             for line in tailer.poll():
                 print(line, file=out)
+            warning = tailer.drop_warning()
+            if warning:
+                print(warning, file=out)
             out.flush()
             if once or tailer.stream_closed():
                 # one final drain: lines written between poll and the closed
                 # manifest must not be lost
                 for line in tailer.poll():
                     print(line, file=out)
+                warning = tailer.drop_warning()
+                if warning:
+                    print(warning, file=out)
                 out.flush()
                 return 0
             _time.sleep(poll_s)

@@ -759,3 +759,29 @@ def test_two_process_fleet_warm_start(tmp_path):
     r2 = _run_serve(fleet)
     assert r2["fleet"]["pull"]["match"] == "exact"
     assert r2["dispatch"]["explore_dispatches"] == 0
+
+
+def test_healthz_and_metrics_share_one_counter_source(auth_server):
+    """After a 401, the /healthz stats and the Prometheus /metrics series
+    must agree — both read the same MetricsRegistry counters."""
+    import urllib.request
+
+    anon = FleetClient(auth_server.url)
+    with pytest.raises(FleetError, match="401"):
+        anon.push(_store([0.001]), "sha1", "chipA")
+    assert anon.health()["stats"]["auth_failures"] == 1
+    with urllib.request.urlopen(auth_server.url + "/metrics") as r:
+        assert r.status == 200
+        assert r.headers["Content-Type"].startswith("text/plain")
+        text = r.read().decode()
+    assert "repro_fleet_auth_failures_total 1" in text
+    assert "repro_fleet_pushes_total 0" in text
+    assert "repro_fleet_snapshots 0" in text
+    # a successful authed push moves BOTH surfaces in lockstep
+    FleetClient(auth_server.url, token="s3cret").push(
+        _store([0.001]), "sha1", "chipA")
+    assert anon.health()["stats"]["pushes"] == 1
+    with urllib.request.urlopen(auth_server.url + "/metrics") as r:
+        text = r.read().decode()
+    assert "repro_fleet_pushes_total 1" in text
+    assert "repro_fleet_snapshots 1" in text

@@ -1,0 +1,550 @@
+"""repro.metrics: registry primitives, trace→metrics sink, sampling gate,
+adaptive controller, HTTP exposition, streaming-session round trips."""
+import bisect
+import json
+import math
+import random
+import urllib.request
+
+import pytest
+
+from repro.core.overhead import stats_from_samples
+from repro.metrics import (
+    DEFAULT_BUCKETS_MS,
+    AdaptiveController,
+    Histogram,
+    MetricsPlane,
+    MetricsRegistry,
+    serve_metrics,
+)
+from repro.trace.collector import TraceCollector, resolve_spans
+from repro.trace.stream import StreamingSession, load_metrics_timeline
+
+
+# ---------------------------------------------------------------------------
+# Counter / Gauge / registry
+# ---------------------------------------------------------------------------
+
+
+def test_counter_monotonic_and_gauge_free():
+    reg = MetricsRegistry()
+    c = reg.counter("c_total", "help text")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("g")
+    g.set(7)
+    g.dec(2)
+    assert g.value == 5.0
+
+
+def test_registry_get_or_create_and_label_series():
+    reg = MetricsRegistry()
+    assert reg.counter("x_total") is reg.counter("x_total")
+    a = reg.counter("y_total", backend="ref")
+    b = reg.counter("y_total", backend="chunked")
+    assert a is not b
+    a.inc()
+    assert b.value == 0
+    # label order must not create distinct series
+    assert reg.counter("z", a="1", b="2") is reg.counter("z", b="2", a="1")
+
+
+def test_registry_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    reg.counter("m")
+    with pytest.raises(TypeError):
+        reg.gauge("m")
+    with pytest.raises(TypeError):
+        reg.histogram("m")
+
+
+# ---------------------------------------------------------------------------
+# Histogram: quantile error bounds, merge algebra, snapshot round trip
+# ---------------------------------------------------------------------------
+
+
+def _bucket_width(bounds, x, lo_obs, hi_obs):
+    """Width of the bucket containing x — the quantile's error bound."""
+    i = bisect.bisect_left(bounds, x)
+    lo = bounds[i - 1] if i > 0 else min(0.0, lo_obs)
+    hi = bounds[i] if i < len(bounds) else hi_obs
+    return hi - lo
+
+
+@pytest.mark.parametrize("dist", ["uniform", "lognormal", "bimodal"])
+def test_quantile_error_bounded_by_bucket_width(dist):
+    rng = random.Random(0)
+    if dist == "uniform":
+        samples = [rng.uniform(0.05, 80.0) for _ in range(4000)]
+    elif dist == "lognormal":
+        samples = [math.exp(rng.gauss(0.0, 1.5)) for _ in range(4000)]
+    else:
+        samples = [rng.gauss(0.3, 0.05) for _ in range(2000)] + \
+                  [rng.gauss(200.0, 20.0) for _ in range(2000)]
+        samples = [max(s, 1e-3) for s in samples]
+    h = Histogram("h_ms", {})
+    for s in samples:
+        h.observe(s)
+    ordered = sorted(samples)
+    for q in (0.5, 0.9, 0.95, 0.99):
+        exact = ordered[min(len(ordered) - 1, int(q * len(ordered)))]
+        est = h.quantile(q)
+        width = _bucket_width(h.bounds, exact, min(samples), max(samples))
+        assert abs(est - exact) <= width + 1e-9, (q, est, exact, width)
+        assert min(samples) <= est <= max(samples)
+
+
+def test_quantile_edges():
+    h = Histogram("h", {})
+    assert h.quantile(0.5) is None
+    h.observe(3.0)
+    assert h.quantile(0.0) == h.quantile(1.0) == 3.0
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    # overflow bucket: observations beyond the last bound clamp to max
+    h2 = Histogram("h2", {}, bounds=(1.0, 2.0))
+    h2.observe(50.0)
+    h2.observe(70.0)
+    assert h2.quantile(0.99) <= 70.0
+
+
+def _hist_from(samples, name="h"):
+    h = Histogram(name, {})
+    for s in samples:
+        h.observe(s)
+    return h
+
+
+def _key(h):
+    s = h.snapshot()
+    return (s["counts"], s["count"], s["sum"], s["min"], s["max"])
+
+
+def test_merge_commutative_and_associative():
+    rng = random.Random(1)
+    sa = [rng.uniform(0.01, 10) for _ in range(300)]
+    sb = [rng.uniform(5, 500) for _ in range(200)]
+    sc = [rng.uniform(0.001, 0.1) for _ in range(100)]
+    ab = _hist_from(sa).merge(_hist_from(sb))
+    ba = _hist_from(sb).merge(_hist_from(sa))
+    assert _key(ab) == _key(ba)
+    ab_c = _hist_from(sa).merge(_hist_from(sb)).merge(_hist_from(sc))
+    a_bc = _hist_from(sa).merge(_hist_from(sb).merge(_hist_from(sc)))
+    assert _key(ab_c) == _key(a_bc)
+    # the merge equals observing the concatenation (sum up to float
+    # addition order)
+    cat = _hist_from(sa + sb + sc)
+    assert _key(ab_c)[:2] == _key(cat)[:2]
+    assert ab_c.sum == pytest.approx(cat.sum)
+    assert _key(ab_c)[3:] == _key(cat)[3:]
+
+
+def test_merge_rejects_mismatched_bounds():
+    a = Histogram("a", {}, bounds=(1.0, 2.0))
+    b = Histogram("b", {}, bounds=(1.0, 3.0))
+    with pytest.raises(ValueError):
+        a.merge(b)
+
+
+def test_histogram_snapshot_json_round_trip():
+    h = _hist_from([0.02, 0.4, 3.3, 900.0, 45000.0])
+    snap = json.loads(json.dumps(h.snapshot()))
+    back = Histogram.from_snapshot(snap)
+    assert _key(back) == _key(h)
+    for q in (0.5, 0.95, 0.99):
+        assert back.quantile(q) == h.quantile(q)
+
+
+def test_invalid_bounds_rejected():
+    with pytest.raises(ValueError):
+        Histogram("h", {}, bounds=())
+    with pytest.raises(ValueError):
+        Histogram("h", {}, bounds=(1.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition
+# ---------------------------------------------------------------------------
+
+
+def test_render_prometheus_format():
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests", backend="ref").inc(3)
+    reg.counter("req_total", "requests", backend="chunked").inc(1)
+    reg.gauge("depth", "queue depth").set(2)
+    h = reg.histogram("lat_ms", "latency", bounds=(1.0, 10.0))
+    for v in (0.5, 5.0, 50.0):
+        h.observe(v)
+    text = reg.render()
+    # one TYPE block per metric name, even with several labelled series
+    assert text.count("# TYPE req_total counter") == 1
+    assert '# TYPE depth gauge' in text and "# TYPE lat_ms histogram" in text
+    assert 'req_total{backend="chunked"} 1' in text
+    assert 'req_total{backend="ref"} 3' in text
+    # buckets are cumulative and +Inf equals the count
+    assert 'lat_ms_bucket{le="1"} 1' in text
+    assert 'lat_ms_bucket{le="10"} 2' in text
+    assert 'lat_ms_bucket{le="+Inf"} 3' in text
+    assert "lat_ms_count 3" in text and "lat_ms_sum 55.5" in text
+
+
+# ---------------------------------------------------------------------------
+# Trace → metrics sink
+# ---------------------------------------------------------------------------
+
+
+def test_sink_counts_lifecycle_dispatch_straggler():
+    log = TraceCollector()
+    plane = MetricsPlane(log)
+    for i in range(3):
+        with log.lifecycle("request", i):
+            pass
+    log.record("dispatch", "op_a",
+               {"backend": "ref", "source": "measured", "measured_s": 0.002})
+    log.record("straggler", "step", {"step": 4})
+    s = plane.summary()
+    assert s["repro_requests_total"] == 3
+    assert s["repro_request_ms_count"] == 3
+    assert s["repro_dispatch_total{backend=ref,op=op_a,source=measured}"] == 1
+    assert s["repro_dispatch_ms_count{backend=ref,op=op_a}"] == 1
+    assert s["repro_stragglers_total"] == 1
+    assert s["repro_trace_events_total{kind=spawn}"] == 3
+    assert s["repro_trace_events_total{kind=exit}"] == 3
+    # durations measured by the sink are real (ms-scale, non-negative)
+    hists = [m for m in plane.registry.metrics() if m.name == "repro_request_ms"]
+    assert hists and hists[0].sum >= 0
+
+
+def test_plane_requires_sink_fanout():
+    from repro.core.events import EventLog
+
+    with pytest.raises(TypeError):
+        MetricsPlane(EventLog())
+
+
+# ---------------------------------------------------------------------------
+# Sampling gate (collector side)
+# ---------------------------------------------------------------------------
+
+
+def test_shedding_keeps_metrics_exact_and_pairing_consistent():
+    log = TraceCollector()
+    plane = MetricsPlane(log)
+    log.set_sample_rate(0.0)
+    for i in range(20):
+        with log.lifecycle("request", i):
+            pass
+    captured = log.events()
+    assert not [e for e in captured if e.name == "request"]  # all shed
+    assert log.drop_counters()["sampled_out"] == 40
+    # no torn pairs: every captured spawn has its exit
+    assert not [s for s in resolve_spans(captured) if s.truncated]
+    # the metrics plane saw every event regardless
+    s = plane.summary()
+    assert s["repro_requests_total"] == 20
+    assert s["repro_request_ms_count"] == 20
+
+
+def test_essential_tracks_never_shed():
+    log = TraceCollector()
+    log.set_sample_rate(0.0)
+    with log.lifecycle("serve_run", 0):
+        with log.lifecycle("checkpoint", 1):
+            pass
+        log.record("dispatch", "op", {"backend": "ref"})
+        log.record("mark", "controller", {"rate": 0.5})
+        log.record("device", "k", {"device": "tpu0"})
+    names = [e.name for e in log.events()]
+    assert names.count("serve_run") == 2
+    assert names.count("checkpoint") == 2
+    assert "op" in names and "controller" in names and "k" in names
+
+
+def test_captured_spawn_exit_always_passes():
+    log = TraceCollector()
+    from repro.core.events import next_span_id
+
+    span = next_span_id()
+    log.record("spawn", "request", 1, span=span)  # captured at rate 1.0
+    log.set_sample_rate(0.0)
+    log.record("exit", "request", 1, span=span)
+    kinds = [e.kind for e in log.events() if e.name == "request"]
+    assert kinds == ["spawn", "exit"]  # the pair survives the rate drop
+
+
+def test_suppressed_spawn_suppresses_matching_exit():
+    log = TraceCollector()
+    from repro.core.events import next_span_id
+
+    span = next_span_id()
+    log.set_sample_rate(0.0)
+    log.record("spawn", "request", 1, span=span)  # shed
+    log.set_sample_rate(1.0)
+    log.record("exit", "request", 1, span=span)  # must be shed too
+    assert not [e for e in log.events() if e.name == "request"]
+    assert log.drop_counters()["sampled_out"] == 2
+
+
+def test_timing_snapshot_reads_and_resets():
+    log = TraceCollector()
+    for i in range(10):
+        log.record("mark", "m", i)
+    snap = log.timing_snapshot()
+    assert snap["records"] == 10 and snap["timed"] >= 1
+    assert snap["timed_s"] > 0
+    again = log.timing_snapshot()
+    assert again["records"] == 0 and again["timed"] == 0
+
+
+def test_broken_extra_sink_detaches_without_killing_record(capsys):
+    log = TraceCollector()
+    seen = []
+
+    def bad(e):
+        seen.append(e)
+        raise RuntimeError("boom")
+
+    log.add_sink(bad)
+    log.record("mark", "a", 0)
+    log.record("mark", "b", 1)  # sink already detached
+    assert len(seen) == 1
+    assert len(log.events()) == 2
+    assert "boom" in (log.stats()["sink_error"] or "")
+
+
+# ---------------------------------------------------------------------------
+# Adaptive controller (deterministic, via a fake collector)
+# ---------------------------------------------------------------------------
+
+
+class _FakeCollector:
+    def __init__(self):
+        self.rate = 1.0
+        self.records = []
+        self._snap = {"timed": 0, "timed_s": 0.0, "records": 0}
+
+    def feed(self, per_record_s, n, elapsed_hint=None):
+        self._snap = {"timed": n, "timed_s": per_record_s * n, "records": n}
+
+    def timing_snapshot(self):
+        out, self._snap = self._snap, {"timed": 0, "timed_s": 0.0, "records": 0}
+        return out
+
+    def set_sample_rate(self, r):
+        self.rate = r
+
+    def record(self, kind, name, payload=None, **kw):
+        self.records.append((kind, name, payload))
+
+
+_NOOP = stats_from_samples("noop", [0.0001])  # 0.1 µs baseline, no calibration
+
+
+def test_controller_sheds_under_synthetic_overhead():
+    col = _FakeCollector()
+    reg = MetricsRegistry()
+    ctl = AdaptiveController(col, reg, budget_pct=5.0, smooth=1.0, noop=_NOOP)
+    import time
+
+    ctl._last_t = time.monotonic() - 1.0  # 1 s window
+    col.feed(per_record_s=0.001, n=200)  # 200 ms tracing per second = 20%
+    over = ctl.step()
+    assert over > 5.0
+    assert col.rate < 1.0 and ctl.adjustments == 1
+    # the decision trail is a recorded controller event
+    assert [r for r in col.records if r[1] == "controller"]
+    assert reg.gauge("repro_trace_overhead_pct").value == round(over, 4)
+    assert reg.gauge("repro_trace_sample_rate_target").value == col.rate
+
+
+def test_controller_recovers_when_cheap():
+    col = _FakeCollector()
+    ctl = AdaptiveController(col, budget_pct=5.0, smooth=1.0, noop=_NOOP)
+    import time
+
+    ctl._last_t = time.monotonic() - 1.0
+    col.feed(per_record_s=0.001, n=500)  # 50% overhead → hard shed
+    ctl.step()
+    shed = col.rate
+    assert shed < 0.2
+    for _ in range(12):  # cheap ticks → multiplicative recovery toward 1.0
+        ctl._last_t = time.monotonic() - 1.0
+        col.feed(per_record_s=0.000001, n=10)
+        ctl.step()
+    assert col.rate == 1.0 and ctl.adjustments >= 3
+
+
+def test_controller_budget_zero_measures_but_never_sheds():
+    col = _FakeCollector()
+    ctl = AdaptiveController(col, budget_pct=0.0, smooth=1.0, noop=_NOOP)
+    import time
+
+    ctl._last_t = time.monotonic() - 1.0
+    col.feed(per_record_s=0.01, n=100)  # 100% overhead
+    over = ctl.step()
+    assert over > 50.0
+    assert col.rate == 1.0 and ctl.adjustments == 0
+
+
+def test_controller_on_real_collector_records_start_event():
+    log = TraceCollector()
+    ctl = AdaptiveController(log, budget_pct=5.0, noop=_NOOP,
+                             interval_s=0.01)
+    ctl.start()
+    ctl.stop()
+    marks = [e for e in log.events() if e.name == "controller"]
+    assert marks and marks[0].payload["budget_pct"] == 5.0
+    snap = ctl.snapshot()
+    assert set(snap) == {"budget_pct", "overhead_pct", "sample_rate",
+                         "adjustments", "noop_ms"}
+
+
+# ---------------------------------------------------------------------------
+# HTTP exposition
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_http_server_scrape():
+    log = TraceCollector()
+    plane = MetricsPlane(log)
+    with log.lifecycle("request", 0):
+        pass
+    server = serve_metrics(plane, port=0)
+    try:
+        with urllib.request.urlopen(server.url + "/metrics") as r:
+            assert r.status == 200
+            assert r.headers["Content-Type"].startswith("text/plain")
+            text = r.read().decode()
+        assert "repro_requests_total 1" in text
+        assert "repro_trace_dropped_total 0" in text
+        with urllib.request.urlopen(server.url + "/metrics.json") as r:
+            doc = json.loads(r.read())
+        assert any(m["name"] == "repro_requests_total" for m in doc["metrics"])
+        with urllib.request.urlopen(server.url + "/healthz") as r:
+            assert json.loads(r.read())["ok"] is True
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(server.url + "/nope")
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# Streaming-session round trip (per-rotation snapshots)
+# ---------------------------------------------------------------------------
+
+
+def test_stream_metrics_snapshots_round_trip(tmp_path):
+    d = str(tmp_path / "run")
+    log = TraceCollector()
+    plane = MetricsPlane(log)
+    stream = StreamingSession(d, rotate_events=4,
+                              metrics_provider=plane.snapshot).attach(log)
+    for i in range(10):
+        with log.lifecycle("request", i):
+            pass
+    stream.close(stats=log.stats())
+
+    timeline = load_metrics_timeline(d)
+    assert len(timeline) >= 2  # rotations + the final snapshot
+    assert timeline[-1]["segment"] == "final"
+    final = timeline[-1]["metrics"]
+    snap = next(m for m in final["metrics"] if m["name"] == "repro_request_ms")
+    live = next(m for m in plane.registry.metrics()
+                if m.name == "repro_request_ms")
+    # count/sum consistency: rebuilt histogram == the live one
+    back = Histogram.from_snapshot(snap)
+    assert back.count == live.count == 10
+    assert back.sum == pytest.approx(live.sum)
+    # manifest carries the latest snapshot + the collector's loss counters
+    manifest = json.load(open(tmp_path / "run" / "MANIFEST.json"))
+    assert manifest["metrics"]["metrics"] and "drops" in manifest
+    assert manifest["drops"]["dropped"] == 0
+
+
+def test_cli_metrics_subcommand(tmp_path, capsys):
+    from repro.trace.cli import main
+
+    d = str(tmp_path / "run")
+    log = TraceCollector()
+    plane = MetricsPlane(log)
+    stream = StreamingSession(d, rotate_events=4,
+                              metrics_provider=plane.snapshot).attach(log)
+    for i in range(6):
+        with log.lifecycle("request", i):
+            pass
+    stream.close(stats=log.stats())
+
+    assert main(["metrics", d, "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["final"] and doc["timeline"]
+    assert main(["metrics", d]) == 0
+    out = capsys.readouterr().out
+    assert "repro_requests_total" in out and "p95_ms" in out
+    # a directory with no metrics sidecar reports, not crashes
+    import os
+
+    empty = str(tmp_path / "empty")
+    os.makedirs(empty)
+    with open(os.path.join(empty, "MANIFEST.json"), "w") as f:
+        json.dump({"schema": "x", "segments": []}, f)
+    assert main(["metrics", empty]) == 1
+
+
+def test_cli_metrics_on_session_file(tmp_path, capsys):
+    from repro.trace import Session
+    from repro.trace.cli import main
+
+    log = TraceCollector()
+    plane = MetricsPlane(log)
+    with log.lifecycle("request", 0):
+        pass
+    sess = Session.capture(log, meta={"metrics": plane.snapshot(),
+                                      "drops": log.drop_counters()})
+    p = str(tmp_path / "s.json")
+    sess.save(p)
+    assert main(["metrics", p, "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert any(m["name"] == "repro_requests_total"
+               for m in doc["final"]["metrics"])
+    # a non-session JSON is a usage error
+    bad = str(tmp_path / "bad.json")
+    with open(bad, "w") as f:
+        json.dump({"nope": 1}, f)
+    assert main(["metrics", bad]) == 2
+
+
+# ---------------------------------------------------------------------------
+# core.overhead: the factored sample-stats helper
+# ---------------------------------------------------------------------------
+
+
+def test_stats_from_samples():
+    s = stats_from_samples("x", [1.0, 2.0, 3.0, 4.0])
+    assert s.mean_ms == pytest.approx(2.5)
+    assert s.median_ms == pytest.approx(2.5)
+    assert s.min_ms == 1.0 and s.max_ms == 4.0
+    with pytest.raises(ValueError):
+        stats_from_samples("x", [])
+
+
+def test_controller_short_window_banks_snapshot():
+    # A near-empty window catching one expensive record (the shutdown
+    # rotation fsync) must not spike the EWMA; its sample is banked and
+    # folded into the next full window instead.
+    col = _FakeCollector()
+    ctl = AdaptiveController(col, budget_pct=5.0, smooth=1.0, noop=_NOOP)
+    import time
+
+    ctl._last_t = time.monotonic() - 1.0
+    col.feed(per_record_s=0.00002, n=100)  # cheap steady state
+    low = ctl.step()
+    assert low < 5.0
+    col.feed(per_record_s=0.005, n=4)  # fsync-like burst, ~0 s window
+    assert ctl.step() == low  # banked, not computed
+    assert col.rate == 1.0
+    ctl._last_t = time.monotonic() - 1.0
+    col.feed(per_record_s=0.00002, n=100)
+    assert ctl.step() > low  # the banked burst lands in the full window

@@ -585,3 +585,37 @@ def test_supervisor_rotates_stream_at_checkpoints(tmp_path, key):
     rep = load_stream(d).report()
     assert any(k.startswith("step/") for k in rep["latency"])
     assert any(k.startswith("checkpoint/") for k in rep["latency"])
+
+
+# ---------------------------------------------------------------------------
+# tail: one-line drop warning when the manifest's loss counters grow
+# ---------------------------------------------------------------------------
+
+
+def test_tail_warns_once_on_drop_counters(tmp_path, capsys):
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    stream = StreamingSession(
+        d, rotate_events=64,
+        stats_provider=lambda: {"dropped": 5, "sampled_out": 2,
+                                "by_track": {"": 4, "request": 1}},
+    ).attach(col)
+    col.record("mark", "m", 0)
+    stream.close()
+    assert main(["tail", d, "--once"]) == 0
+    warns = [l for l in capsys.readouterr().out.splitlines()
+             if l.startswith("# WARNING")]
+    assert len(warns) == 1  # counters only grew once -> exactly one line
+    assert "5 events dropped" in warns[0] and "main" in warns[0]
+    assert "2 events shed by adaptive sampling" in warns[0]
+
+
+def test_tail_silent_without_drops(tmp_path, capsys):
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    stream = StreamingSession(d, rotate_events=64).attach(col)
+    col.record("mark", "m", 0)
+    stream.close(stats=col.stats())
+    assert main(["tail", d, "--once"]) == 0
+    assert not [l for l in capsys.readouterr().out.splitlines()
+                if l.startswith("# WARNING")]

@@ -633,3 +633,113 @@ def test_cli_report_export_diff(tmp_path, capsys):
     assert main(["diff", pa, pb]) == 0
     out = capsys.readouterr().out
     assert "dispatch choices" in out
+
+
+# ---------------------------------------------------------------------------
+# Drop accounting in report + span-tree path attribution (diff --by-path)
+# ---------------------------------------------------------------------------
+
+
+def test_report_surfaces_drop_accounting_top_level():
+    col = _sample_collector()
+    sess = Session.capture(col, collector_stats={
+        "events": 7, "capacity": 512, "dropped": 3,
+        "dropped_by_track": {"request": 3, "dispatch": 0},
+        "sampled_out": 5})
+    rep = sess.report()
+    assert rep["dropped_by_track"] == {"request": 3}  # zero entries filtered
+    assert rep["sampled_out"] == 5
+    assert "truncated_spans" in rep
+    # survives save -> load -> report
+    import tempfile, os
+    with tempfile.TemporaryDirectory() as d:
+        p = sess.save(os.path.join(d, "s.json"))
+        assert Session.load(p).report()["dropped_by_track"] == {"request": 3}
+
+
+def test_cli_report_warns_on_drops_and_shedding(tmp_path, capsys):
+    from repro.trace.cli import main
+
+    col = _sample_collector()
+    sess = Session.capture(col, collector_stats={
+        "events": 7, "capacity": 512, "dropped": 2,
+        "dropped_by_track": {"request": 2}, "sampled_out": 9})
+    p = sess.save(str(tmp_path / "s.json"))
+    assert main(["report", p]) == 0
+    out = capsys.readouterr().out
+    assert "drops by track" in out and "request" in out
+    assert "sampled out" in out and "9" in out
+    assert main(["report", p, "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["dropped_by_track"] == {"request": 2}
+    assert doc["sampled_out"] == 9
+
+
+def _path_session(prefill_s: float) -> Session:
+    """Two requests of 0.5 s each, one prefill child of ``prefill_s``."""
+    from repro.trace.session import SESSION_SCHEMA
+
+    rows = []
+
+    def ev(t, kind, name, span, parent):
+        rows.append({"t": t, "kind": kind, "name": name, "payload": None,
+                     "span": span, "parent": parent})
+
+    for i in range(2):
+        base, rid, pf = i * 1.0, 10 + i * 2, 11 + i * 2
+        ev(base + 0.0, "spawn", "request", rid, 0)
+        ev(base + 0.01, "spawn", "prefill", pf, rid)
+        ev(base + 0.01 + prefill_s, "exit", "prefill", pf, rid)
+        ev(base + 0.5, "exit", "request", rid, 0)
+    return Session.from_dict({"meta": {"schema": SESSION_SCHEMA},
+                              "trace": {"events": rows}})
+
+
+def test_path_report_exclusive_conserved_under_depth_cap():
+    sess = _path_session(0.1)
+    rep = sess.path_report(max_depth=4)
+    assert rep["request"]["count"] == 2
+    assert rep["request/prefill"]["count"] == 2
+    # exclusive: the request path excludes its prefill children
+    assert rep["request"]["exclusive_ms"] == pytest.approx(2 * 400.0)
+    assert rep["request/prefill"]["exclusive_ms"] == pytest.approx(2 * 100.0)
+    # depth cap folds child time into the capped ancestor; totals conserved
+    capped = sess.path_report(max_depth=1)
+    assert capped["request"]["exclusive_ms"] == pytest.approx(2 * 500.0)
+    assert "request/prefill" not in capped
+
+
+def test_path_diff_attributes_regression_to_grown_node():
+    from repro.trace import path_diff, path_regressions
+
+    rows = path_diff(_path_session(0.1), _path_session(0.2))
+    by = {r["path"]: r for r in rows}
+    assert by["request/prefill"]["delta_pct"] == pytest.approx(100.0)
+    # request's own exclusive time SHRANK (same total, bigger child): the
+    # regression lands on the node that grew, not the whole request
+    assert by["request"]["delta_pct"] < 0
+    regs = path_regressions(rows, 25.0)
+    assert [r["key"] for r in regs] == ["request/prefill"]
+    assert regs[0]["kind"] == "path-exclusive"
+
+
+def test_cli_diff_by_path_gate(tmp_path, capsys):
+    from repro.trace.cli import EXIT_REGRESSION, main
+
+    pa = _path_session(0.1).save(str(tmp_path / "a.json"))
+    pb = _path_session(0.2).save(str(tmp_path / "b.json"))
+    assert main(["diff", pa, pb, "--by-path"]) == 0
+    out = capsys.readouterr().out
+    assert "request/prefill" in out and "span-tree path" in out
+
+    rc = main(["diff", pa, pb, "--by-path", "--fail-over-pct", "25", "--json"])
+    assert rc == EXIT_REGRESSION
+    doc = json.loads(capsys.readouterr().out)
+    assert any(r["key"] == "request/prefill" and r["kind"] == "path-exclusive"
+               for r in doc["regressions"])
+
+    # --by-path is a session-only view: bench artifacts have no span tree
+    bench = str(tmp_path / "bench.json")
+    with open(bench, "w") as f:
+        json.dump({"meta": artifact_meta(), "x": 1}, f)
+    assert main(["diff", bench, bench, "--by-path"]) == 2
