@@ -151,17 +151,91 @@ def bench_record_path(warmup: int = 64, runs: int = 512,
     return rows, snaps
 
 
+def bench_device_capture(warmup: int = 16, runs: int = 128,
+                         spans_per_call: int = 8) -> tuple[list[overhead.TimingStats], dict]:
+    """Device-capture overhead: what a live profiler window actually costs.
+
+    The workload is a burst of prefill lifecycles (the serve hot path the
+    live profiler snoops).  Three configurations, same hyperfine protocol:
+
+      baseline    — the span burst with no profiler attached
+      window_on   — the burst while one capture window stays open (the
+                    marginal per-event snoop cost inside a window)
+      per_window  — the burst plus a full open/stop/parse/align/merge cycle
+                    per call — the largely *fixed* per-window machinery cost
+                    the DeviceCaptureBudget loop amortises by stretching the
+                    off time between windows
+
+    Uses the synthetic backend so the numbers measure this repo's window
+    machinery, not a particular accelerator's profiler.
+    """
+    import tempfile
+
+    from repro.trace.collector import TraceCollector
+    from repro.trace.liveprof import LiveDeviceProfiler
+
+    def burst(col):
+        for i in range(spans_per_call):
+            with col.lifecycle("prefill", i):
+                pass
+
+    col0 = TraceCollector(capacity=8192)
+    rows = [overhead.hyperfine(lambda: burst(col0), label="baseline",
+                               warmup=warmup, runs=runs)]
+
+    # one window held open across the whole arm: snoop cost only
+    col1 = TraceCollector(capacity=8192)
+    prof1 = LiveDeviceProfiler(
+        col1, tempfile.mkdtemp(prefix="repro-bench-devw-"),
+        backend="synthetic", budget_pct=100.0)
+    assert prof1.open_window()
+    rows.append(overhead.hyperfine(lambda: burst(col1), label="window_on",
+                                   warmup=warmup, runs=runs))
+    prof1.close_window()
+    window_on_snap = prof1.snapshot()
+
+    # full capture cycle per call: the fixed cost the budget loop bounds
+    col2 = TraceCollector(capacity=8192)
+    prof2 = LiveDeviceProfiler(
+        col2, tempfile.mkdtemp(prefix="repro-bench-devc-"),
+        backend="synthetic", budget_pct=100.0)
+
+    def cycle():
+        prof2.open_window()
+        burst(col2)
+        prof2.close_window()
+
+    rows.append(overhead.hyperfine(cycle, label="per_window",
+                                   warmup=warmup, runs=runs))
+    cyc = prof2.snapshot()
+    snaps = {
+        "window_on": {"merged_events": window_on_snap["merged_events"],
+                      "align": window_on_snap["align"]},
+        "per_window": {"windows": cyc["windows"],
+                       "merged_events": cyc["merged_events"],
+                       "align": cyc["align"],
+                       "budget": cyc["budget"]},
+    }
+    return rows, snaps
+
+
 def run(fast: bool = False) -> dict:
     micro = bench_microbench(warmup=30, runs=200) if fast else bench_microbench()
     model = bench_model_step(warmup=5, runs=30) if fast else bench_model_step()
     record = (bench_record_path(warmup=32, runs=256) if fast
               else bench_record_path())
+    device = (bench_device_capture(warmup=8, runs=64) if fast
+              else bench_device_capture())
     out = {
         "microbench": [r.row() for r in micro],
         "model_step": [r.row() for r in model],
         "record_path": {
             "rows": [r.row() for r in record[0]],
             **record[1],
+        },
+        "device_capture": {
+            "rows": [r.row() for r in device[0]],
+            **device[1],
         },
     }
     print("== Table I analogue: microbench (~1 ms workload, paper protocol) ==")
@@ -176,6 +250,13 @@ def run(fast: bool = False) -> dict:
               f"sampled_out={snap['sampled_out']} "
               f"captured={snap['captured_events']} "
               f"adjustments={snap['adjustments']}")
+    print("\n== device capture: window snoop cost vs full per-window cycle ==")
+    print(overhead.table(device[0]))
+    dcy = device[1]["per_window"]
+    print(f"  per_window: windows={dcy['windows']} "
+          f"merged={dcy['merged_events']} "
+          f"annotated={dcy['align'].get('annotated_fraction', 0):.0%} "
+          f"cost_ewma={dcy['budget']['cost_ewma_s'] * 1e3:.3f}ms")
     return out
 
 

@@ -126,10 +126,15 @@ class EventLog:
         *,
         span: int = 0,
         parent: Optional[int] = None,
+        t: Optional[float] = None,
     ) -> None:
+        """Append one event.  ``t`` overrides the timestamp (monotonic
+        seconds) for events measured elsewhere — merged device slices carry
+        their own clock; everything else stamps ``time.monotonic()`` here."""
         if parent is None:
             parent = current_span()
-        ev = Event(time.monotonic(), kind, name, payload, span, parent)
+        ev = Event(time.monotonic() if t is None else t, kind, name, payload,
+                   span, parent)
         with self._lock:
             if self._events.maxlen is not None and len(self._events) == self._events.maxlen:
                 self._dropped += 1

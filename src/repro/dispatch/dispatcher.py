@@ -34,6 +34,22 @@ from repro.hw.specs import ChipSpec
 
 POLICIES = ("static", "roofline", "profiled")
 
+_annotation_fn: Optional[Callable[[int], Any]] = None
+
+
+def _device_annotation(span_id: int) -> Any:
+    """Profiler annotation for the executed variant (free null context when
+    no live device profiler is active).  Imported lazily: pulling
+    ``repro.trace.liveprof`` in at module scope would cycle through
+    ``repro.trace`` → ``session`` → ``dispatch.profiles`` back into this
+    package mid-import."""
+    global _annotation_fn
+    if _annotation_fn is None:
+        from repro.trace.liveprof import device_annotation
+
+        _annotation_fn = device_annotation
+    return _annotation_fn(span_id)
+
 
 @dataclasses.dataclass(frozen=True)
 class DispatchConfig:
@@ -175,9 +191,14 @@ class Dispatcher:
         decision = self.choose(op, sig, {b: estimates[b] for b in variants if b in estimates})
         idx = len(self.decisions) - 1  # choose() appended; backfill measurement
         fn = variants[decision.backend]
+        # span id allocated BEFORE execution so an active device profiler can
+        # annotate the launched work with it — the profiler's slices then bind
+        # to this exact decision instead of a fuzzy time window
+        span_id = next_span_id() if self.cfg.record_events else 0
         t0 = time.perf_counter()
-        out = fn(*args, **kwargs)
-        jax.block_until_ready(out)
+        with _device_annotation(span_id):
+            out = fn(*args, **kwargs)
+            jax.block_until_ready(out)
         dt = time.perf_counter() - t0
         self.store.record(op, decision.backend, sig, dt)
         decision = dataclasses.replace(decision, measured_s=dt)
@@ -185,7 +206,7 @@ class Dispatcher:
         if self.cfg.record_events:
             # own span id + context parent: the decision is a span-tree node
             # under the request/step whose span_scope is active right now
-            self.log.record("dispatch", op, decision.payload(), span=next_span_id())
+            self.log.record("dispatch", op, decision.payload(), span=span_id)
         return out
 
     # -- whole-graph placement -------------------------------------------------

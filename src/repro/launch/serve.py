@@ -24,6 +24,15 @@ B starts the adaptive controller, which self-measures record-path overhead
 and duty-cycles span capture to keep it under B% (0 = always-on: measure but
 never shed).  Either flag activates the controller; metric snapshots land in
 --trace-dir at every rotation and in the final JSON under "metrics".
+
+Live device profiling (repro.trace.liveprof): --jax-profile DIR runs
+jax.profiler capture in duty-cycled windows under a second, device-specific
+budget loop sharing --trace-overhead-budget-pct (budget 0 = one calibration
+window then measure-only); each closed window is parsed, span-aligned and
+merged into the live trace/stream, and feeds repro_device_* series on
+/metrics.  --jax-profile-backend synthetic exercises the same path with no
+accelerator (CI); on CPU-only jax the real backend degrades gracefully with
+one warning.
 """
 from __future__ import annotations
 
@@ -100,6 +109,16 @@ def main() -> None:
     ap.add_argument("--metrics-linger-s", type=float, default=0.0, metavar="S",
                     help="keep the /metrics listener up S seconds after the "
                          "run completes (scrape windows for CI/cron)")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="live device profiling: duty-cycled jax.profiler "
+                         "capture windows dumped under DIR, parsed and merged "
+                         "into the live trace under the overhead budget")
+    ap.add_argument("--jax-profile-backend", default="auto",
+                    choices=("auto", "jax", "synthetic"),
+                    help="profiler backend: jax.profiler (auto/jax; degrades "
+                         "gracefully without one) or the synthetic CI stub")
+    ap.add_argument("--jax-profile-period-s", type=float, default=2.0,
+                    metavar="S", help="device capture window period (on+off)")
     args = ap.parse_args()
     if args.fleet and args.dispatch == "off":
         # a fleet-less run would silently neither warm-start nor push
@@ -133,6 +152,19 @@ def main() -> None:
         import sys
 
         print(f"metrics: {mserver.url}/metrics", file=sys.stderr)
+    prof = None
+    if args.jax_profile:
+        from repro.trace.liveprof import LiveDeviceProfiler
+
+        prof = LiveDeviceProfiler(
+            log, args.jax_profile,
+            registry=plane.registry,
+            backend=args.jax_profile_backend,
+            budget_pct=(DEFAULT_BUDGET_PCT
+                        if args.trace_overhead_budget_pct is None
+                        else args.trace_overhead_budget_pct),
+            period_s=args.jax_profile_period_s,
+        )
     dispatcher = None
     aged = []
     if args.dispatch != "off":
@@ -164,6 +196,7 @@ def main() -> None:
             store_provider=(lambda: dispatcher.store) if dispatcher is not None else None,
             fleet_push=pusher.push if pusher is not None else None,
             metrics_provider=plane.snapshot,
+            device_provider=prof.snapshot if prof is not None else None,
         ).attach(log)
     eng = Engine(
         cfg,
@@ -179,6 +212,8 @@ def main() -> None:
         metrics=plane.registry,
     )
     rng = np.random.default_rng(args.seed)
+    if prof is not None:
+        prof.start()
     t0 = time.time()
     # root span of the whole run: every request (and transitively every
     # prefill/dispatch) nests under it in report --tree and the exporters
@@ -188,6 +223,8 @@ def main() -> None:
             eng.submit(prompt, max_new=args.max_new)
         results = eng.run_to_completion()
     wall = time.time() - t0
+    if prof is not None:
+        prof.stop()  # force-closes the open window: short runs still merge
     total_new = sum(len(v) for v in results.values())
     durations = log.durations("prefill")
     rec = {
@@ -208,6 +245,9 @@ def main() -> None:
     if controller is not None:
         controller.stop()  # final overhead reading lands in the gauges
         rec["trace_controller"] = controller.snapshot()
+    if prof is not None:
+        rec["device_capture"] = prof.snapshot()
+        run_meta["device_capture"] = rec["device_capture"]
     rec["metrics"] = plane.summary()
     trace_stats = log.stats()  # stats() resolves spans; compute once
     rec["trace"] = trace_stats

@@ -109,6 +109,16 @@ def main() -> None:
                          "self-measured record-path overhead under PCT%% "
                          "(0 = always-on: measure, never shed; default 5 "
                          "when --metrics-port is given)")
+    ap.add_argument("--jax-profile", default=None, metavar="DIR",
+                    help="live device profiling: duty-cycled jax.profiler "
+                         "capture windows dumped under DIR, parsed and merged "
+                         "into the live trace under the overhead budget")
+    ap.add_argument("--jax-profile-backend", default="auto",
+                    choices=("auto", "jax", "synthetic"),
+                    help="profiler backend: jax.profiler (auto/jax; degrades "
+                         "gracefully without one) or the synthetic CI stub")
+    ap.add_argument("--jax-profile-period-s", type=float, default=2.0,
+                    metavar="S", help="device capture window period (on+off)")
     args = ap.parse_args()
     if args.fleet and args.dispatch == "off":
         # a fleet-less run would silently neither warm-start nor push
@@ -207,6 +217,19 @@ def main() -> None:
 
             mserver = serve_metrics(plane, port=args.metrics_port)
             print(f"metrics: {mserver.url}/metrics", file=sys.stderr)
+        prof = None
+        if args.jax_profile:
+            from repro.trace.liveprof import LiveDeviceProfiler
+
+            prof = LiveDeviceProfiler(
+                log, args.jax_profile,
+                registry=plane.registry,
+                backend=args.jax_profile_backend,
+                budget_pct=(DEFAULT_BUDGET_PCT
+                            if args.trace_overhead_budget_pct is None
+                            else args.trace_overhead_budget_pct),
+                period_s=args.jax_profile_period_s,
+            )
         stream = None
         if args.trace_dir:
             stream = StreamingSession(
@@ -217,6 +240,7 @@ def main() -> None:
                 store_provider=(lambda: dispatcher.store) if dispatcher is not None else None,
                 fleet_push=pusher.push if pusher is not None else None,
                 metrics_provider=plane.snapshot,
+                device_provider=prof.snapshot if prof is not None else None,
             ).attach(log)
         fail_at = tuple(int(s) for s in args.fail_at.split(",") if s)
         sup = Supervisor(
@@ -235,12 +259,16 @@ def main() -> None:
             step_variants=step_variants,
             stream=stream,
         )
+        if prof is not None:
+            prof.start()
         t0 = time.time()
         # root span: steps (and their checkpoint/dispatch children) nest
         # under the run in report --tree and the exporters
         with log.lifecycle("train_run", {"arch": cfg.name, "mesh": args.mesh}):
             out = sup.run()
         wall = time.time() - t0
+        if prof is not None:
+            prof.stop()  # force-closes the open window: short runs still merge
 
     losses = [float(m["loss"]) for m in out["metrics"]]
     tok_per_step = args.batch * args.seq
@@ -264,6 +292,9 @@ def main() -> None:
     if controller is not None:
         controller.stop()  # final overhead reading lands in the gauges
         rec["trace_controller"] = controller.snapshot()
+    if prof is not None:
+        rec["device_capture"] = prof.snapshot()
+        run_meta["device_capture"] = rec["device_capture"]
     rec["metrics"] = plane.summary()
     trace_stats = log.stats()  # stats() resolves spans; compute once
     rec["trace"] = trace_stats

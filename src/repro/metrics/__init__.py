@@ -8,6 +8,7 @@ HTTP scrape endpoint (:mod:`.http`).
 from repro.metrics.controller import (
     DEFAULT_BUDGET_PCT,
     AdaptiveController,
+    DeviceCaptureBudget,
     calibrate_noop,
 )
 from repro.metrics.http import MetricsHTTPServer, serve_metrics
@@ -25,6 +26,7 @@ __all__ = [
     "DEFAULT_BUDGET_PCT",
     "TIMED_UNITS",
     "AdaptiveController",
+    "DeviceCaptureBudget",
     "Counter",
     "Gauge",
     "Histogram",

@@ -181,3 +181,139 @@ class AdaptiveController:
             "adjustments": self.adjustments,
             "noop_ms": round(self.noop.mean_ms, 6),
         }
+
+
+class DeviceCaptureBudget:
+    """Second budget loop, device-specific: schedules duty-cycled profiler
+    capture windows for :class:`repro.trace.liveprof.LiveDeviceProfiler`.
+
+    Host-span shedding (:class:`AdaptiveController`) bounds a *per-event*
+    cost by admitting fewer events.  Device capture has a different cost
+    shape: each window pays a largely **fixed** price (profiler start/stop
+    plus parsing and aligning the dump) regardless of how short the window
+    is, so shrinking the window-on fraction alone cannot bound overhead —
+    the off time between windows must stretch until the fixed cost
+    amortises under budget.  The law here does both:
+
+    * overhead EWMA from each cycle's measured cost over its wall time;
+    * over budget → shrink ``on_fraction`` proportionally (less device data
+      per cycle, cheaper parse) **and** lengthen the next off time to
+      ``cost * 100/budget`` so even the fixed floor fits the budget;
+    * under half budget → multiplicative recovery of ``on_fraction``.
+
+    ``budget_pct <= 0`` means **measure-only**: one calibration window runs
+    (so the cost gauges mean something), then capture disables and the loop
+    keeps exporting the measured numbers.
+    """
+
+    def __init__(
+        self,
+        registry: Optional[MetricsRegistry] = None,
+        *,
+        budget_pct: float = DEFAULT_BUDGET_PCT,
+        period_s: float = 2.0,
+        min_on_s: float = 0.05,
+        min_fraction: float = 0.05,
+        grow: float = 1.5,
+        smooth: float = 0.5,
+    ) -> None:
+        self.budget_pct = float(budget_pct)
+        self.period_s = float(period_s)
+        self.min_on_s = min_on_s
+        self.min_fraction = min_fraction
+        self.grow = grow
+        self.smooth = smooth
+        self.on_fraction = 0.5 if self.budget_pct > 0 else min_fraction
+        self.overhead_pct = 0.0
+        self.cost_ewma_s = 0.0
+        self.windows = 0
+        self.adjustments = 0
+        self.capture_enabled = True
+        self._g_overhead = self._g_fraction = self._g_budget = None
+        self._g_adjust = self._g_windows = None
+        if registry is not None:
+            self._g_overhead = registry.gauge(
+                "repro_device_capture_overhead_pct",
+                "measured device-capture overhead (start/stop+parse+align),"
+                " % of wall time (EWMA)")
+            self._g_fraction = registry.gauge(
+                "repro_device_capture_on_fraction",
+                "fraction of each capture period the profiler window is on")
+            self._g_budget = registry.gauge(
+                "repro_device_capture_budget_pct",
+                "configured device-capture overhead budget")
+            self._g_budget.set(self.budget_pct)
+            self._g_adjust = registry.gauge(
+                "repro_device_capture_adjustments",
+                "device window-fraction changes so far")
+            self._g_windows = registry.gauge(
+                "repro_device_capture_windows",
+                "device capture windows completed so far")
+            self._g_fraction.set(self.on_fraction)
+
+    def plan(self) -> tuple[float, float]:
+        """(on_s, off_s) for the next capture cycle.
+
+        ``on_s = 0`` means capture is disabled (measure-only after the
+        calibration window, or the budget loop shut it off)."""
+        if not self.capture_enabled:
+            return 0.0, self.period_s
+        on_s = max(self.min_on_s, self.period_s * self.on_fraction)
+        off_s = self.period_s - on_s
+        if self.budget_pct > 0 and self.cost_ewma_s > 0:
+            # the fixed per-window cost must amortise under budget even if
+            # narrowing the window saves nothing: stretch the off time
+            need = self.cost_ewma_s * 100.0 / self.budget_pct - on_s
+            off_s = max(off_s, need)
+        return on_s, max(0.0, off_s)
+
+    def observe(self, cost_s: float, elapsed_s: float) -> float:
+        """Fold one completed window's measured cost into the loop.
+
+        ``cost_s`` is the wall time the capture machinery itself consumed
+        (start+stop+parse+align); ``elapsed_s`` the full cycle it is spread
+        over.  Returns the overhead estimate (pct)."""
+        self.windows += 1
+        self.cost_ewma_s = (cost_s if self.windows == 1 else
+                            self.smooth * cost_s
+                            + (1.0 - self.smooth) * self.cost_ewma_s)
+        if elapsed_s > 0:
+            inst = 100.0 * cost_s / elapsed_s
+            self.overhead_pct = (inst if self.windows == 1 else
+                                 self.smooth * inst
+                                 + (1.0 - self.smooth) * self.overhead_pct)
+        if self.budget_pct <= 0:
+            # calibration complete: measure-only from here on
+            self.capture_enabled = False
+        else:
+            f = self.on_fraction
+            if self.overhead_pct > self.budget_pct:
+                f = max(self.min_fraction,
+                        f * self.budget_pct / self.overhead_pct)
+            elif self.overhead_pct < 0.5 * self.budget_pct and f < 1.0:
+                f = min(1.0, f * self.grow)
+            if abs(f - self.on_fraction) >= 1e-3:
+                self.on_fraction = f
+                self.adjustments += 1
+        self.export()
+        return self.overhead_pct
+
+    def export(self) -> None:
+        if self._g_overhead is None:
+            return
+        self._g_overhead.set(round(self.overhead_pct, 4))
+        self._g_fraction.set(round(self.on_fraction if self.capture_enabled
+                                   else 0.0, 4))
+        self._g_adjust.set(self.adjustments)
+        self._g_windows.set(self.windows)
+
+    def snapshot(self) -> dict[str, Any]:
+        return {
+            "budget_pct": self.budget_pct,
+            "overhead_pct": round(self.overhead_pct, 4),
+            "on_fraction": round(self.on_fraction, 4),
+            "cost_ewma_s": round(self.cost_ewma_s, 6),
+            "windows": self.windows,
+            "adjustments": self.adjustments,
+            "capture_enabled": self.capture_enabled,
+        }

@@ -14,6 +14,10 @@ Derived series (all prefixed ``repro_``):
   decode_tick, checkpoint, restart, train_step;
 * ``repro_dispatch_total{op,backend,source}`` and
   ``repro_dispatch_ms{op,backend}`` from dispatch decisions' measured runs;
+* ``repro_device_ms{device,op}`` histograms and
+  ``repro_device_slices_total{align}`` from merged device slices, plus
+  ``repro_device_capture_windows_total`` from the live profiler's
+  window-close marks (see :mod:`repro.trace.liveprof`);
 * ``repro_stragglers_total``, ``repro_trace_controller_events_total``;
 * ``repro_trace_events_total{kind}`` for the raw stream.
 
@@ -38,10 +42,17 @@ TIMED_UNITS = frozenset({
 })
 
 _NAME_RE = re.compile(r"[^a-zA-Z0-9_]")
+# "span=<id>" annotation prefixes on device slice names are per-request —
+# strip them so the op label stays low-cardinality
+_SPAN_TOKEN_RE = re.compile(r"\bspan[=:]\d+\s*")
 
 
 def _metric_name(name: str) -> str:
     return _NAME_RE.sub("_", name)
+
+
+def _device_op(name: str) -> str:
+    return _SPAN_TOKEN_RE.sub("", name).strip() or "?"
 
 
 class MetricsSink:
@@ -57,6 +68,11 @@ class MetricsSink:
         self._unit_hists: dict[str, Histogram] = {}
         self._dispatch_counters: dict[tuple, Counter] = {}
         self._dispatch_hists: dict[tuple, Histogram] = {}
+        self._device_hists: dict[tuple, Histogram] = {}
+        self._device_counters: dict[str, Counter] = {}
+        self._capture_windows = registry.counter(
+            "repro_device_capture_windows_total",
+            "live device-capture windows merged")
         self._stragglers = registry.counter(
             "repro_stragglers_total", "straggler detections")
         self._controller_events = registry.counter(
@@ -118,6 +134,30 @@ class MetricsSink:
                         op=hkey[0], backend=hkey[1])
                     self._dispatch_hists[hkey] = h
                 h.observe(float(measured) * 1e3)
+        elif e.kind == "device":
+            p = e.payload if isinstance(e.payload, dict) else {}
+            align = str(p.get("align") or "none")
+            c = self._device_counters.get(align)
+            if c is None:
+                c = self.registry.counter(
+                    "repro_device_slices_total",
+                    "merged device slices by alignment mode", align=align)
+                self._device_counters[align] = c
+            c.inc()
+            dur = p.get("dur_s")
+            if isinstance(dur, (int, float)):
+                hkey = (str(p.get("device") or "?"), _device_op(e.name))
+                h = self._device_hists.get(hkey)
+                if h is None:
+                    h = self.registry.histogram(
+                        "repro_device_ms", "device slice wall time (ms)",
+                        device=hkey[0], op=hkey[1])
+                    self._device_hists[hkey] = h
+                h.observe(float(dur) * 1e3)
+        elif e.name == "device_window":
+            p = e.payload if isinstance(e.payload, dict) else {}
+            if "events" in p:  # window-close marks only (not start/warning)
+                self._capture_windows.inc()
         elif e.kind == "straggler":
             self._stragglers.inc()
         elif e.name == "controller":

@@ -29,6 +29,7 @@ from repro.dispatch.cost import estimate_callable
 from repro.dispatch.dispatcher import Dispatcher, with_impl
 from repro.dispatch.profiles import signature
 from repro.models import lm
+from repro.trace.liveprof import device_annotation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,8 +175,12 @@ class Engine:
             req = self.queue.pop(0)
             req.slot = slot
             # the prefill (and the dispatch decision it triggers) must nest
-            # under the request span, whose bracket events live elsewhere
-            with span_scope(req.span), self.log.lifecycle("prefill", req.rid):
+            # under the request span, whose bracket events live elsewhere;
+            # the device annotation stamps the prefill span id onto every
+            # profiler slice launched inside it
+            with span_scope(req.span), \
+                    self.log.lifecycle("prefill", req.rid) as psid, \
+                    device_annotation(psid):
                 tokens = jnp.asarray(req.prompt, jnp.int32)[None]
                 logits, new_caches = self._prefill(self.params, tokens)
                 self.caches = jax.tree.map(
@@ -199,7 +204,8 @@ class Engine:
         tokens = np.zeros(B, np.int32)
         for r in live:
             tokens[r.slot] = r.out[-1]
-        with self.log.lifecycle("decode_tick", len(live)):
+        with self.log.lifecycle("decode_tick", len(live)) as dsid, \
+                device_annotation(dsid):
             logits, self.caches = self._decode(
                 self.params,
                 jnp.asarray(tokens),

@@ -15,11 +15,24 @@ The observability layer over :mod:`repro.core.events`:
   open segment) and crash recovery back into sessions;
 * :mod:`repro.trace.device` — ``jax.profiler`` dump adapter: device slices
   aligned under their owning host spans (per-device tracks below host rows);
-* :mod:`repro.trace.cli` — ``python -m repro.trace {report,export,diff,compact}``.
+* :mod:`repro.trace.liveprof` — live duty-cycled device profiling: capture
+  windows under the overhead budget, merged into the running trace with
+  exact ``span=`` annotation alignment;
+* :mod:`repro.trace.cli` — ``python -m repro.trace {report,export,diff,compact,device}``.
 """
 from repro.trace.collector import Span, SpanNode, TraceCollector, resolve_spans, span_tree
-from repro.trace.device import align_device_slices, load_profiler_trace, merge_device_trace
+from repro.trace.device import (
+    align_device_slices,
+    alignment_summary,
+    load_profiler_trace,
+    merge_device_trace,
+)
 from repro.trace.export import export, to_chrome_trace, to_folded, to_speedscope
+from repro.trace.liveprof import (
+    LiveDeviceProfiler,
+    SyntheticProfilerBackend,
+    device_annotation,
+)
 from repro.trace.session import (
     Session,
     age_out_profiles,
@@ -44,7 +57,11 @@ __all__ = [
     "Span",
     "SpanNode",
     "TraceCollector",
+    "LiveDeviceProfiler",
+    "SyntheticProfilerBackend",
     "align_device_slices",
+    "alignment_summary",
+    "device_annotation",
     "load_profiler_trace",
     "merge_device_trace",
     "resolve_spans",

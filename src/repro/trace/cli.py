@@ -5,6 +5,7 @@
   PYTHONPATH=src python -m repro.trace diff    a.json b.json [--fail-over-pct 25]
   PYTHONPATH=src python -m repro.trace compact run_dir/ -o session.json
   PYTHONPATH=src python -m repro.trace tail    run_dir/ [--once]
+  PYTHONPATH=src python -m repro.trace device  run_dir/ [--json]
   PYTHONPATH=src python -m repro.trace push-profiles run_dir/ --fleet http://host:8377
 
 ``report`` prints per-op / per-backend latency tables for one session —
@@ -20,9 +21,11 @@ directory (``--trace-dir``) back into the one-file session format.
 ``report``, ``export`` and ``diff`` also accept segment directories directly.
 
 ``tail`` follows a live ``--trace-dir`` like ``tail -f`` (one line per event
-with track + duration; ``--once`` drains and exits); ``push-profiles``
-backfills the fleet profile service (:mod:`repro.fleet`) from a recorded
-session or segment directory.
+with track + duration; ``--once`` drains and exits); ``device`` summarises a
+run's device side — live-capture window coverage, per-device time, and the
+annotated-vs-time-window alignment ratio (see :mod:`repro.trace.liveprof`);
+``push-profiles`` backfills the fleet profile service (:mod:`repro.fleet`)
+from a recorded session or segment directory.
 """
 from __future__ import annotations
 
@@ -96,19 +99,33 @@ def _print_tree(rows: list[dict[str, Any]]) -> None:
               f"{row['inclusive_ms']:>11.3f}{row['exclusive_ms']:>11.3f}")
 
 
-def _maybe_merge_device(sess: Session, args: argparse.Namespace) -> None:
-    if getattr(args, "device_trace", None):
-        from repro.trace.device import merge_device_trace
+def _maybe_merge_device(sess: Session, args: argparse.Namespace) -> int:
+    """Fold a ``--device-trace`` dump into the loaded session.
 
+    Returns 0 on success (or nothing to do), 2 on a bad dump — an
+    xplane-only directory (no chrome trace without xprof installed) or a
+    missing path gets a one-line error instead of a traceback."""
+    if not getattr(args, "device_trace", None):
+        return 0
+    from repro.trace.device import merge_device_trace
+
+    try:
         n = merge_device_trace(sess, args.device_trace,
                                offset_s=args.device_offset_s)
-        print(f"merged {n} device events from {args.device_trace}",
+    except (ValueError, FileNotFoundError) as exc:
+        print(f"error: --device-trace {args.device_trace}: {exc}",
               file=sys.stderr)
+        return 2
+    print(f"merged {n} device events from {args.device_trace}",
+          file=sys.stderr)
+    return 0
 
 
 def cmd_report(args: argparse.Namespace) -> int:
     sess = load_any(args.session)
-    _maybe_merge_device(sess, args)
+    rc = _maybe_merge_device(sess, args)
+    if rc:
+        return rc
     if args.tree:
         rows = sess.tree_report()
         if args.json:
@@ -134,7 +151,9 @@ def cmd_report(args: argparse.Namespace) -> int:
 
 def cmd_export(args: argparse.Namespace) -> int:
     sess = load_any(args.session)
-    _maybe_merge_device(sess, args)
+    rc = _maybe_merge_device(sess, args)
+    if rc:
+        return rc
     text = render(sess.events, args.format, meta=sess.meta)
     if args.out:
         with open(args.out, "w") as f:
@@ -162,6 +181,93 @@ def cmd_tail(args: argparse.Namespace) -> int:
     except FileNotFoundError as exc:
         print(f"error: {exc}", file=sys.stderr)
         return 1
+
+
+def cmd_device(args: argparse.Namespace) -> int:
+    """Device-side summary of a recorded run.
+
+    Reports live-capture coverage (windows, captured fraction, measured
+    overhead vs budget — from the session/manifest ``device_capture``
+    record), per-device time, and how the merged slices aligned to host
+    spans (``span=`` annotation vs time-window fallback vs unparented).
+    """
+    try:
+        sess = load_any(args.session)
+    except FileNotFoundError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 1
+    rc = _maybe_merge_device(sess, args)
+    if rc:
+        return rc
+    import re as _re
+
+    from repro.trace.device import DEVICE_KIND, alignment_summary
+
+    align = alignment_summary(sess.events)
+    by_device: dict[str, dict[str, float]] = {}
+    by_op: dict[str, dict[str, float]] = {}
+    for e in sess.events:
+        if e.kind != DEVICE_KIND or not isinstance(e.payload, dict):
+            continue
+        dur_ms = 1e3 * float(e.payload.get("dur_s") or 0.0)
+        dev = str(e.payload.get("device") or "?")
+        row = by_device.setdefault(dev, {"slices": 0, "total_ms": 0.0})
+        row["slices"] += 1
+        row["total_ms"] += dur_ms
+        op = _re.sub(r"\bspan[=:]\d+\s*", "", e.name).strip() or "?"
+        row = by_op.setdefault(op, {"slices": 0, "total_ms": 0.0})
+        row["slices"] += 1
+        row["total_ms"] += dur_ms
+    capture = sess.meta.get("device_capture") or (
+        sess.meta.get("device_trace"))
+    out = {
+        "session": args.session,
+        "device_events": align["total"],
+        "align": align,
+        "by_device": {d: {"slices": r["slices"],
+                          "total_ms": round(r["total_ms"], 3)}
+                      for d, r in sorted(by_device.items())},
+        "by_op": {o: {"slices": r["slices"], "total_ms": round(r["total_ms"], 3)}
+                  for o, r in sorted(by_op.items())},
+        "capture": capture,
+    }
+    if args.json:
+        print(json.dumps(out, indent=1))
+        return 0
+    if isinstance(capture, dict) and "windows" in capture:
+        cov = capture.get("coverage") or {}
+        budget = capture.get("budget") or {}
+        print(f"capture  backend={capture.get('backend')}  "
+              f"windows={capture.get('windows')}  "
+              f"coverage={cov.get('fraction', 0):.1%} "
+              f"({cov.get('captured_s', 0):g}s of {cov.get('run_s', 0):g}s)")
+        print(f"budget   overhead={budget.get('overhead_pct', 0):g}%  "
+              f"budget={budget.get('budget_pct', 0):g}%  "
+              f"on_fraction={budget.get('on_fraction', 0):g}  "
+              f"adjustments={budget.get('adjustments', 0)}")
+        if capture.get("degraded"):
+            print(f"WARNING: capture degraded: {capture['degraded']}")
+    elif isinstance(capture, dict):
+        print(f"capture  post-hoc merge of {capture.get('path')} "
+              f"({capture.get('events')} events)")
+    else:
+        print("capture  none recorded (run with --jax-profile, or merge a "
+              "dump with --device-trace)")
+    if not align["total"]:
+        print("no device events in this session")
+        return 0
+    print(f"align    span={align['span']}  window={align['window']}  "
+          f"none={align['none']}  annotated={align['annotated_fraction']:.1%}")
+    print(f"\n{'device':<28}{'slices':>8}{'total_ms':>12}")
+    for dev, row in sorted(by_device.items()):
+        print(f"{dev:<28}{row['slices']:>8}{row['total_ms']:>12.3f}")
+    print(f"\n{'op':<28}{'slices':>8}{'total_ms':>12}")
+    top = sorted(by_op.items(), key=lambda kv: -kv[1]["total_ms"])[:20]
+    for op, row in top:
+        print(f"{op[:27]:<28}{row['slices']:>8}{row['total_ms']:>12.3f}")
+    if len(by_op) > 20:
+        print(f"... {len(by_op) - 20} more ops")
+    return 0
 
 
 def cmd_push_profiles(args: argparse.Namespace) -> int:
@@ -400,6 +506,14 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--poll", type=float, default=0.2, metavar="SECONDS",
                    help="poll interval while following")
     p.set_defaults(fn=cmd_tail)
+
+    p = sub.add_parser("device",
+                       help="device-side summary: capture coverage, per-device "
+                            "time, annotation alignment ratio")
+    p.add_argument("session", help="session JSON or streaming segment directory")
+    p.add_argument("--json", action="store_true", help="machine-readable output")
+    _add_device_args(p)
+    p.set_defaults(fn=cmd_device)
 
     p = sub.add_parser("push-profiles",
                        help="backfill the fleet profile service from a recorded run")

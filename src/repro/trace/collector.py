@@ -64,6 +64,7 @@ TRACK_OF: dict[str, str] = {
     "restart": "checkpoint",
     "elastic_resize": "checkpoint",
     "controller": "controller",
+    "device_window": "controller",
 }
 
 # Host tracks order before device tracks (``device:<name>``, sorted after the
@@ -230,6 +231,7 @@ class TraceCollector(EventLog):
         *,
         span: int = 0,
         parent: Optional[int] = None,
+        t: Optional[float] = None,
     ) -> None:
         # racy read of _rec_count is fine: timing needs ~1/TIMING_EVERY calls
         t0 = (time.perf_counter()
@@ -237,7 +239,8 @@ class TraceCollector(EventLog):
               else None)
         if parent is None:
             parent = current_span()
-        ev = Event(time.monotonic(), kind, name, payload, span, parent)
+        ev = Event(time.monotonic() if t is None else t, kind, name, payload,
+                   span, parent)
         track = self._track_for(kind, name, payload)
         ring = self._rings.get(track)
         with self._lock:

@@ -70,14 +70,19 @@ class DeviceSlice:
         return 0
 
 
-def _find_trace_file(path: str) -> str:
-    """Resolve a profiler dump directory to its chrome trace file."""
+def _find_trace_files(path: str) -> list[str]:
+    """Resolve a profiler dump directory to its chrome trace file(s).
+
+    A one-shot ``jax.profiler.trace`` dump holds a single file; a duty-cycled
+    live-capture directory (:mod:`repro.trace.liveprof`) holds one per
+    window — all of them belong to the run, so all are returned.
+    """
     if os.path.isfile(path):
-        return path
+        return [path]
     for pattern in ("*.trace.json.gz", "*.trace.json", "*.json.gz", "*.json"):
         hits = sorted(glob.glob(os.path.join(path, "**", pattern), recursive=True))
         if hits:
-            return hits[0]
+            return hits
     xplanes = glob.glob(os.path.join(path, "**", "*.xplane.pb"), recursive=True)
     if xplanes:
         raise ValueError(
@@ -88,17 +93,11 @@ def _find_trace_file(path: str) -> str:
     raise FileNotFoundError(f"no chrome trace (*.trace.json[.gz]) under {path}")
 
 
-def load_profiler_trace(path: str, *, device_only: bool = True) -> list[DeviceSlice]:
-    """Parse a ``jax.profiler`` dump (file or TensorBoard dir) into slices.
+def _find_trace_file(path: str) -> str:
+    return _find_trace_files(path)[0]
 
-    Reads the Chrome Trace Event JSON (gzipped or plain), maps ``pid`` rows
-    to their ``process_name`` metadata, and returns every complete (``X``)
-    event as a :class:`DeviceSlice` with timestamps in seconds.
-    ``device_only`` keeps only device-looking processes when the dump names
-    any (host python threads stay host-side — the collector already has
-    them); dumps with no recognisable device rows are returned whole.
-    """
-    file = _find_trace_file(path)
+
+def _parse_trace_file(file: str) -> list[DeviceSlice]:
     opener = gzip.open if file.endswith(".gz") else open
     with opener(file, "rt") as f:
         doc = json.load(f)
@@ -121,6 +120,24 @@ def load_profiler_trace(path: str, *, device_only: bool = True) -> list[DeviceSl
             device=device,
             args=r.get("args") or {},
         ))
+    return out
+
+
+def load_profiler_trace(path: str, *, device_only: bool = True) -> list[DeviceSlice]:
+    """Parse a ``jax.profiler`` dump (file or TensorBoard dir) into slices.
+
+    Reads the Chrome Trace Event JSON (gzipped or plain), maps ``pid`` rows
+    to their ``process_name`` metadata, and returns every complete (``X``)
+    event as a :class:`DeviceSlice` with timestamps in seconds.  Directories
+    holding several trace files (one per duty-cycled capture window) are
+    merged.  ``device_only`` keeps only device-looking processes when the
+    dump names any (host python threads stay host-side — the collector
+    already has them); dumps with no recognisable device rows are returned
+    whole.
+    """
+    out: list[DeviceSlice] = []
+    for file in _find_trace_files(path):
+        out.extend(_parse_trace_file(file))
     if device_only:
         dev = [s for s in out if _DEVICE_PID_RE.search(s.device)]
         if dev:  # host-only dumps (pure-CPU smoke runs) are returned whole
@@ -134,14 +151,27 @@ def align_device_slices(
     slices: Iterable[DeviceSlice],
     *,
     offset_s: Optional[float] = None,
+    id_alloc: Optional[Any] = None,
+    stats: Optional[dict[str, int]] = None,
 ) -> list[Event]:
     """Turn profiler slices into ``device`` events parented to host spans.
 
     Each returned event carries ``kind="device"``, a fresh span id of its
     own (so device slices are real span-tree nodes), and
-    ``payload={"dur_s", "device", ...}`` — exactly what
+    ``payload={"dur_s", "device", "align", ...}`` — exactly what
     :func:`repro.trace.collector.resolve_spans` needs to rebuild the device
     span and :mod:`repro.trace.export` needs to render per-device tracks.
+    ``payload["align"]`` records how the parent was found: ``"span"``
+    (explicit annotation hint), ``"window"`` (time containment fallback) or
+    ``"none"`` (device-track root).
+
+    ``id_alloc`` is a zero-arg callable producing fresh span ids.  Live
+    merges (same process as the recording run) must pass
+    :func:`repro.core.events.next_span_id` so device ids share the host
+    counter; the default — allocate strictly above every id the host events
+    mention — is for post-hoc merges where the recording process's counter
+    is gone.  ``stats``, when given, accumulates counts per alignment mode
+    (keys ``span``/``window``/``none``/``total``).
     """
     host_events = sorted(host_events, key=lambda e: e.t)
     slices = list(slices)
@@ -153,11 +183,14 @@ def align_device_slices(
     spans = [s for s in resolve_spans(host_events) if s.span]
     by_id = {s.span: s for s in spans}
 
-    # Device span ids must not collide with the session's host ids: the
-    # session was recorded in another process, so this process's global
-    # counter is meaningless here — allocate strictly above every id the
-    # host events mention (span_tree treats parent >= own id as corrupt).
-    next_id = 1 + max((max(e.span, e.parent) for e in host_events), default=0)
+    if id_alloc is None:
+        # Device span ids must not collide with the session's host ids: the
+        # session was recorded in another process, so this process's global
+        # counter is meaningless here — allocate strictly above every id the
+        # host events mention (span_tree treats parent >= own id as corrupt).
+        base = 1 + max((max(e.span, e.parent) for e in host_events), default=0)
+        counter = iter(range(base, base + len(slices)))
+        id_alloc = lambda: next(counter)
 
     # innermost-containing-span lookup via a single time sweep: spans enter
     # the active set at t0 and leave at t1, so each slice midpoint consults
@@ -168,6 +201,7 @@ def align_device_slices(
     starts = sorted(spans, key=lambda s: s.t0)
     active: dict[int, Any] = {}
     owners: dict[int, int] = {}
+    modes: dict[int, str] = {}
     si = 0
     for i in mids:
         mid = (slices[i].t0 + slices[i].t1) / 2 + offset_s
@@ -179,22 +213,45 @@ def align_device_slices(
         hint = slices[i].span_hint
         if hint and hint in by_id:
             owners[i] = hint
+            modes[i] = "span"
         elif active:
             owners[i] = min(active.values(), key=lambda s: s.dur).span
+            modes[i] = "window"
         else:
             owners[i] = 0
+            modes[i] = "none"
 
     out: list[Event] = []
     for i, sl in enumerate(slices):
         t0, t1 = sl.t0 + offset_s, sl.t1 + offset_s
-        payload: dict[str, Any] = {"dur_s": max(0.0, t1 - t0), "device": sl.device}
+        payload: dict[str, Any] = {"dur_s": max(0.0, t1 - t0),
+                                   "device": sl.device, "align": modes[i]}
         if sl.args:
             payload["args"] = {k: v for k, v in sl.args.items()
                                if isinstance(v, (int, float, str, bool))}
         out.append(Event(t0, DEVICE_KIND, sl.name, payload,
-                         span=next_id, parent=owners[i]))
-        next_id += 1
+                         span=id_alloc(), parent=owners[i]))
+        if stats is not None:
+            stats[modes[i]] = stats.get(modes[i], 0) + 1
+            stats["total"] = stats.get("total", 0) + 1
     return out
+
+
+def alignment_summary(events: Iterable[Event]) -> dict[str, Any]:
+    """Per-mode counts + annotated fraction over merged ``device`` events."""
+    counts = {"span": 0, "window": 0, "none": 0, "total": 0}
+    for e in events:
+        if e.kind != DEVICE_KIND or not isinstance(e.payload, dict):
+            continue
+        mode = e.payload.get("align")
+        if mode not in counts:
+            mode = "none"
+        counts[mode] += 1
+        counts["total"] += 1
+    counts["annotated_fraction"] = (
+        counts["span"] / counts["total"] if counts["total"] else 0.0
+    )
+    return counts
 
 
 def merge_device_trace(
@@ -202,12 +259,17 @@ def merge_device_trace(
 ) -> int:
     """Merge a profiler dump into a loaded Session, in place.
 
-    Returns the number of device events merged; records the dump path and
-    count under ``session.meta["device_trace"]``.
+    Returns the number of device events merged; records the dump path,
+    count and per-mode alignment stats under
+    ``session.meta["device_trace"]``.
     """
+    stats: dict[str, int] = {}
     merged = align_device_slices(
-        session.events, load_profiler_trace(path), offset_s=offset_s
+        session.events, load_profiler_trace(path), offset_s=offset_s,
+        stats=stats,
     )
     session.events = sorted(session.events + merged, key=lambda e: e.t)
-    session.meta["device_trace"] = {"path": path, "events": len(merged)}
+    session.meta["device_trace"] = {
+        "path": path, "events": len(merged), "align": stats,
+    }
     return len(merged)

@@ -91,6 +91,7 @@ class StreamingSession:
         fleet_push: Optional[Callable[[], Any]] = None,
         metrics_provider: Optional[Callable[[], dict[str, Any]]] = None,
         stats_provider: Optional[Callable[[], dict[str, Any]]] = None,
+        device_provider: Optional[Callable[[], dict[str, Any]]] = None,
     ) -> None:
         if rotate_events < 1:
             raise ValueError(f"rotate_events must be >= 1, got {rotate_events}")
@@ -104,6 +105,7 @@ class StreamingSession:
         self.fleet_push = fleet_push
         self.metrics_provider = metrics_provider
         self.stats_provider = stats_provider
+        self.device_provider = device_provider
         if chip is None:
             from repro.hw.specs import default_chip
 
@@ -285,6 +287,16 @@ class StreamingSession:
                     self._manifest["drops"] = drops
             except Exception as exc:
                 print(f"trace stream: drop-counter refresh failed "
+                      f"({type(exc).__name__}: {exc})", file=sys.stderr)
+        if self.device_provider is not None:
+            # per-window device-capture coverage rides in the manifest so a
+            # crashed run still knows which windows made it to disk
+            try:
+                dev = self.device_provider()
+                if dev is not None:
+                    self._manifest["device_capture"] = dev
+            except Exception as exc:
+                print(f"trace stream: device-capture refresh failed "
                       f"({type(exc).__name__}: {exc})", file=sys.stderr)
         if self.metrics_provider is None:
             return

@@ -1,0 +1,412 @@
+"""Live device profiling plane: duty-cycled capture under the budget loop.
+
+Covers the second (device-specific) budget loop, the synthetic CI backend
+driving the full window/parse/align/merge path, exact span-annotation
+alignment (golden: zero window-fallback), the alignment-quality gauge on
+mixed traces, streaming-manifest coverage, graceful degradation, the
+``repro.trace device`` CLI and the ``--device-trace`` dump-dir fixes.
+"""
+import contextlib
+import gzip
+import json
+import time
+
+import pytest
+
+from repro.core.events import Event
+from repro.metrics import DeviceCaptureBudget, MetricsPlane
+from repro.trace import (
+    LiveDeviceProfiler,
+    Session,
+    StreamingSession,
+    TraceCollector,
+    load_profiler_trace,
+    load_stream,
+)
+from repro.trace.cli import main
+from repro.trace.liveprof import (
+    DeviceCaptureUnavailable,
+    SyntheticProfilerBackend,
+    annotations_enabled,
+    device_annotation,
+    make_backend,
+    set_annotations,
+)
+from repro.trace.stream import MANIFEST_NAME
+
+
+# ---------------------------------------------------------------------------
+# DeviceCaptureBudget: the device-specific budget loop
+# ---------------------------------------------------------------------------
+
+
+def test_budget_zero_runs_one_calibration_window_then_measure_only():
+    b = DeviceCaptureBudget(budget_pct=0.0, period_s=1.0)
+    on, _ = b.plan()
+    assert on > 0  # the calibration window still runs
+    b.observe(cost_s=0.01, elapsed_s=1.0)
+    assert b.capture_enabled is False
+    assert b.overhead_pct == pytest.approx(1.0)  # the measurement survives
+    on2, off2 = b.plan()
+    assert on2 == 0.0 and off2 == 1.0
+
+
+def test_budget_narrows_fraction_and_stretches_off_time():
+    b = DeviceCaptureBudget(budget_pct=5.0, period_s=1.0)
+    f0 = b.on_fraction
+    b.observe(cost_s=0.2, elapsed_s=1.0)  # 20% overhead, 4x over budget
+    assert b.on_fraction < f0
+    assert b.adjustments == 1
+    on, off = b.plan()
+    # the per-window cost is fixed: the off gap must stretch until it
+    # amortises under budget even if narrowing the window saves nothing
+    assert on + off >= b.cost_ewma_s * 100.0 / b.budget_pct
+    assert off > b.period_s - on  # stretched beyond the nominal period
+
+
+def test_budget_recovers_multiplicatively_when_cheap():
+    b = DeviceCaptureBudget(budget_pct=5.0, period_s=1.0)
+    b.on_fraction = 0.1
+    b.observe(cost_s=0.0001, elapsed_s=1.0)  # 0.01% << half budget
+    assert b.on_fraction == pytest.approx(0.15)  # * grow (1.5)
+    assert b.on_fraction <= 1.0
+
+
+def test_budget_fraction_floors_at_min():
+    b = DeviceCaptureBudget(budget_pct=1.0, period_s=1.0, min_fraction=0.05)
+    for _ in range(6):
+        b.observe(cost_s=0.5, elapsed_s=1.0)  # 50x over budget
+    assert b.on_fraction == pytest.approx(0.05)
+    assert b.capture_enabled is True  # never self-disables over budget
+
+
+# ---------------------------------------------------------------------------
+# Synthetic backend + LiveDeviceProfiler: the full window path, no hardware
+# ---------------------------------------------------------------------------
+
+
+def _make_prof(tmp_path, col, plane=None, **kw):
+    kw.setdefault("backend", "synthetic")
+    kw.setdefault("budget_pct", 5.0)
+    return LiveDeviceProfiler(
+        col, str(tmp_path / "prof"),
+        registry=plane.registry if plane is not None else None, **kw)
+
+
+def test_golden_all_annotated_zero_window_fallback(tmp_path):
+    """Every call-site slice binds by span= — no containment fallback."""
+    col = TraceCollector()
+    plane = MetricsPlane(col)
+    prof = _make_prof(tmp_path, col, plane)
+    assert prof.open_window()
+    for i in range(2):
+        with col.lifecycle("prefill", i):
+            time.sleep(0.001)
+    for i in range(3):
+        with col.lifecycle("decode_tick", i):
+            time.sleep(0.001)
+    merged = prof.close_window()
+    assert merged == 5
+
+    devs = [e for e in col.events() if e.kind == "device"]
+    assert len(devs) == 5
+    assert all(e.payload["align"] == "span" for e in devs)
+    host_spans = {e.span for e in col.events() if e.kind == "spawn"}
+    assert all(e.parent in host_spans for e in devs)  # exact parents
+    assert all(e.span not in host_spans and e.span != 0 for e in devs)
+
+    snap = prof.snapshot()
+    assert snap["align"]["annotated_fraction"] == 1.0
+    assert snap["align"].get("window", 0) == 0
+    assert snap["align"].get("none", 0) == 0
+    assert snap["windows"] == 1 and snap["merged_events"] == 5
+
+    s = plane.summary()
+    assert s["repro_device_alignment_annotated_fraction"] == 1.0
+    # device series label op with the span token stripped
+    assert s["repro_device_ms_count{device=/device:SYNTH:0,op=prefill}"] == 2
+    assert s["repro_device_ms_count{device=/device:SYNTH:0,op=decode_tick}"] == 3
+    assert s["repro_device_slices_total{align=span}"] == 5
+    assert s["repro_device_capture_windows_total"] == 1
+    assert s["repro_device_capture_overhead_pct"] >= 0
+
+
+def test_mixed_alignment_gauge_reflects_annotated_fraction(tmp_path):
+    """Span-less device work falls back to window containment — and the
+    alignment-quality gauge reports exactly the annotated fraction."""
+    col = TraceCollector()
+    plane = MetricsPlane(col)
+    prof = _make_prof(tmp_path, col, plane)
+    assert prof.open_window()
+    with col.lifecycle("prefill", 0):
+        time.sleep(0.001)
+    # an un-spanned prefill: the synthetic backend emits an unhinted slice,
+    # which can only align by time-window containment under the outer request
+    with col.lifecycle("request", 0):
+        col.record("spawn", "prefill", None, span=0)
+        time.sleep(0.002)
+        col.record("exit", "prefill", None, span=0)
+    merged = prof.close_window()
+    assert merged == 2
+
+    by_align = {}
+    for e in col.events():
+        if e.kind == "device":
+            by_align.setdefault(e.payload["align"], []).append(e)
+    assert len(by_align["span"]) == 1 and len(by_align["window"]) == 1
+
+    frac = prof.snapshot()["align"]["annotated_fraction"]
+    assert frac == pytest.approx(0.5)
+    s = plane.summary()
+    assert s["repro_device_alignment_annotated_fraction"] == pytest.approx(frac)
+    assert s["repro_device_slices_total{align=span}"] == 1
+    assert s["repro_device_slices_total{align=window}"] == 1
+
+
+def test_stop_force_closes_open_window_short_run(tmp_path):
+    col = TraceCollector()
+    prof = _make_prof(tmp_path, col)
+    assert prof.open_window()
+    with col.lifecycle("decode_tick", 0):
+        pass
+    prof.stop()  # never close_window()ed: stop must flush it
+    assert len(prof.windows) == 1
+    assert prof.merged_events >= 1
+    assert annotations_enabled() is False  # stop() tears annotations down
+
+
+def test_budget_zero_profiler_calibrates_then_disables(tmp_path):
+    col = TraceCollector()
+    prof = _make_prof(tmp_path, col, budget_pct=0.0)
+    assert prof.open_window()
+    with col.lifecycle("prefill", 0):
+        pass
+    prof.close_window()
+    assert prof.budget.capture_enabled is False  # measure-only from here
+    assert prof.budget.windows == 1
+    assert prof.degraded is None  # not a failure — the run keeps tracing host
+
+
+def test_thread_loop_produces_windows(tmp_path):
+    col = TraceCollector()
+    prof = _make_prof(tmp_path, col, budget_pct=50.0, period_s=0.05)
+    prof.start()
+    try:
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            with col.lifecycle("decode_tick", 0):
+                time.sleep(0.002)
+            if len(prof.windows) >= 2:
+                break
+    finally:
+        prof.stop()
+    assert len(prof.windows) >= 2
+    marks = [e for e in col.events()
+             if e.name == "device_window" and isinstance(e.payload, dict)
+             and "events" in e.payload]
+    assert len(marks) == len(prof.windows)
+    assert all("overhead_pct" in m.payload for m in marks)
+
+
+# ---------------------------------------------------------------------------
+# Degradation: no backend -> one warning event, the run proceeds
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_backend_degrades_with_single_warning(tmp_path):
+    col = TraceCollector()
+    prof = LiveDeviceProfiler(col, str(tmp_path / "p"), backend="bogus",
+                              budget_pct=5.0)
+    assert prof.degraded and "bogus" in prof.degraded
+    assert prof.open_window() is False
+    prof.start()  # must be a no-op, not a crash
+    prof.stop()
+    warns = [e for e in col.events()
+             if e.name == "device_window" and isinstance(e.payload, dict)
+             and "warning" in e.payload]
+    assert len(warns) == 1  # exactly one, however often capture is poked
+    assert prof.budget.capture_enabled is False
+    assert prof.snapshot()["degraded"]
+
+
+def test_backend_failure_mid_run_degrades_once(tmp_path):
+    col = TraceCollector()
+    prof = _make_prof(tmp_path, col)
+
+    def boom():
+        raise RuntimeError("profiler fell over")
+
+    prof.backend.stop = boom
+    assert prof.open_window()
+    assert prof.close_window() == 0
+    assert prof.degraded and "profiler fell over" in prof.degraded
+    assert prof.open_window() is False  # capture stays off
+    warns = [e for e in col.events()
+             if e.name == "device_window" and isinstance(e.payload, dict)
+             and "warning" in e.payload]
+    assert len(warns) == 1
+
+
+def test_make_backend_unknown_kind_raises():
+    with pytest.raises(DeviceCaptureUnavailable):
+        make_backend("nope", TraceCollector())
+
+
+# ---------------------------------------------------------------------------
+# Annotations: module flag + null context off the hot path
+# ---------------------------------------------------------------------------
+
+
+def test_device_annotation_null_when_inactive_or_spanless():
+    set_annotations(False)
+    assert isinstance(device_annotation(5), contextlib.nullcontext)
+    set_annotations(True)
+    try:
+        if annotations_enabled():  # jax present in this environment
+            cm = device_annotation(7)
+            assert not isinstance(cm, contextlib.nullcontext)
+            with cm:
+                pass
+            # span 0 means "not traced": never pay for an annotation
+            assert isinstance(device_annotation(0), contextlib.nullcontext)
+    finally:
+        set_annotations(False)
+
+
+# ---------------------------------------------------------------------------
+# Streaming session integration: live merge + per-window manifest coverage
+# ---------------------------------------------------------------------------
+
+
+def test_stream_manifest_records_device_capture(tmp_path):
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    prof = _make_prof(tmp_path, col)
+    stream = StreamingSession(d, rotate_events=8,
+                              device_provider=prof.snapshot).attach(col)
+    assert prof.open_window()
+    for i in range(3):
+        with col.lifecycle("prefill", i):
+            time.sleep(0.001)
+    assert prof.close_window() == 3
+    stream.close(stats=col.stats())
+
+    manifest = json.load(open(tmp_path / "run" / MANIFEST_NAME))
+    dc = manifest["device_capture"]
+    assert dc["windows"] == 1 and dc["merged_events"] == 3
+    assert dc["align"]["annotated_fraction"] == 1.0
+    assert dc["window_log"][0]["events"] == 3
+
+    # the merged device events rode the sink into the stream, and the
+    # manifest block surfaces as session meta on recovery
+    sess = load_stream(d)
+    devs = [e for e in sess.events if e.kind == "device"]
+    assert len(devs) == 3
+    assert sess.meta["device_capture"]["merged_events"] == 3
+
+
+def test_device_provider_failure_is_best_effort(tmp_path, capsys):
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+
+    def bad_provider():
+        raise RuntimeError("snapshot exploded")
+
+    stream = StreamingSession(d, rotate_events=4,
+                              device_provider=bad_provider).attach(col)
+    for i in range(6):
+        with col.lifecycle("request", i):
+            pass
+    stream.close(stats=col.stats())  # must not raise
+    manifest = json.load(open(tmp_path / "run" / MANIFEST_NAME))
+    assert "device_capture" not in manifest
+    assert "device-capture refresh failed" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# repro.trace device CLI + --device-trace dump-dir handling
+# ---------------------------------------------------------------------------
+
+
+def _stream_with_capture(tmp_path):
+    d = str(tmp_path / "run")
+    col = TraceCollector()
+    prof = _make_prof(tmp_path, col)
+    stream = StreamingSession(d, rotate_events=64,
+                              device_provider=prof.snapshot).attach(col)
+    assert prof.open_window()
+    for i in range(2):
+        with col.lifecycle("prefill", i):
+            time.sleep(0.001)
+    prof.close_window()
+    stream.close(stats=col.stats())
+    return d, prof
+
+
+def test_cli_device_reports_coverage_and_alignment(tmp_path, capsys):
+    d, _ = _stream_with_capture(tmp_path)
+    assert main(["device", d]) == 0
+    out = capsys.readouterr().out
+    assert "backend=synthetic" in out and "windows=1" in out
+    assert "annotated=100.0%" in out
+    assert "/device:SYNTH:0" in out
+    assert "prefill" in out
+
+
+def test_cli_device_json(tmp_path, capsys):
+    d, _ = _stream_with_capture(tmp_path)
+    assert main(["device", d, "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["align"]["annotated_fraction"] == 1.0
+    assert doc["capture"]["windows"] == 1
+    assert doc["by_device"]["/device:SYNTH:0"]["slices"] == 2
+    assert "prefill" in doc["by_op"]
+
+
+def test_cli_device_missing_path_exits_1(tmp_path, capsys):
+    assert main(["device", str(tmp_path / "nope")]) == 1
+    assert "error" in capsys.readouterr().err
+
+
+def test_cli_report_accepts_streaming_dir_with_window_dump(tmp_path, capsys):
+    """--device-trace on a live-profiler out dir (one trace file per window)
+    merges every window, against a streaming segment-dir session."""
+    d, prof = _stream_with_capture(tmp_path)
+    assert main(["report", d, "--device-trace", prof.out_dir,
+                 "--device-offset-s", "0"]) == 0
+    out = capsys.readouterr().out
+    assert "device:/device:SYNTH:0" in out
+
+
+def test_cli_device_trace_xplane_only_exits_2(tmp_path, capsys):
+    col = TraceCollector()
+    with col.lifecycle("prefill", 0):
+        pass
+    path = Session(meta={}, events=col.events()).save(str(tmp_path / "s.json"))
+    xp = tmp_path / "xp" / "plugins" / "profile" / "r"
+    xp.mkdir(parents=True)
+    (xp / "host.xplane.pb").write_bytes(b"\x00")
+    rc = main(["report", path, "--device-trace", str(tmp_path / "xp")])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "xplane" in err and "--device-trace" in err
+    assert "Traceback" not in err  # helpful error, not a stack dump
+
+
+def test_load_profiler_trace_merges_all_window_files(tmp_path):
+    """A dump root holding several per-window trace files merges them all
+    (the live profiler writes one per window)."""
+    for i, (name, ts) in enumerate([("fusion.a", 1_000_000),
+                                    ("fusion.b", 3_000_000)]):
+        run = tmp_path / f"window-{i:04d}" / "plugins" / "profile" / "r"
+        run.mkdir(parents=True)
+        rows = [
+            {"ph": "M", "pid": 7, "name": "process_name",
+             "args": {"name": "/device:TPU:0"}},
+            {"ph": "X", "pid": 7, "tid": 1, "name": name,
+             "ts": ts, "dur": 10_000},
+        ]
+        with gzip.open(run / "local.trace.json.gz", "wt") as f:
+            json.dump({"traceEvents": rows}, f)
+    slices = load_profiler_trace(str(tmp_path))
+    assert [s.name for s in slices] == ["fusion.a", "fusion.b"]  # time order
