@@ -12,6 +12,10 @@ to the processing units where they can execute most effectively"):
      placement policy; profile-guided must match the best static backend
      (steady-state decode has one dominant shape, so matching is the win).
 
+Plus C (cross-run warm start), D (fleet aggregation warm start) and
+E (repro.router: single replica vs a routed 2-replica fleet under the same
+offered load — tail p95 and per-request routing overhead).
+
   PYTHONPATH=src python -m benchmarks.dispatch_bench [--fast]
 """
 from __future__ import annotations
@@ -248,6 +252,75 @@ def fleet_workload(fast: bool) -> dict:
     }
 
 
+def router_workload(fast: bool) -> dict:
+    """Workload E: one replica vs a routed 2-replica fleet, same offered load.
+
+    Spawns ``python -m repro.router`` twice (synthetic replicas — this bench
+    measures the routing tier, not the model) and drives the identical
+    deterministic workload through the front door.  Two replicas under the
+    same offered load should cut the tail (two decode loops share the
+    batching pressure), and the router's own decision cost shows up as
+    ``route_overhead_ms`` — both land in the stamped bench JSON, where the
+    ``repro.trace diff`` gate picks up every ``*_ms`` leaf automatically.
+    """
+    import signal
+    import subprocess
+    import sys
+    import tempfile
+
+    from repro.router.loadgen import build_specs, run as loadgen_run
+    from repro.utils.ready import read_ready_info, wait_for_ready_file
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    n_req = 40 if fast else 80
+
+    def routed(replicas: int, workdir: str) -> dict:
+        os.makedirs(workdir, exist_ok=True)
+        ready = os.path.join(workdir, "router.ready")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.router",
+             "--replicas", str(replicas), "--synthetic",
+             "--synthetic-ms-per-token", "4", "--max-batch", "2",
+             "--queue-depth", "64", "--port", "0",
+             "--ready-file", ready, "--workdir", os.path.join(workdir, "w")],
+            env=env, cwd=repo,
+            stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        )
+        try:
+            wait_for_ready_file(ready, timeout_s=120, proc=proc)
+            url = read_ready_info(ready)["url"]
+            specs = build_specs(n_req, [8, 16, 32], 8, seed=2)
+            return loadgen_run(url, specs, concurrency=6, timeout_s=120)
+        finally:
+            proc.send_signal(signal.SIGTERM)
+            try:
+                proc.wait(timeout=30)
+            except subprocess.TimeoutExpired:
+                proc.kill()
+
+    with tempfile.TemporaryDirectory(prefix="router_bench_") as root:
+        single = routed(1, os.path.join(root, "single"))
+        fleet = routed(2, os.path.join(root, "fleet"))
+
+    return {
+        "requests": n_req,
+        "single_tail_p95_ms": round(single["latency_ms"]["p95"], 3),
+        "routed_tail_p95_ms": round(fleet["latency_ms"]["p95"], 3),
+        "route_overhead_ms": fleet["route_ms"]["mean"],
+        "single_by_replica": single["by_replica"],
+        "routed_by_replica": fleet["by_replica"],
+        # advisory on shared runners (1.10 slack for timer + scheduler noise)
+        "routed_tail_le_single": (
+            fleet["latency_ms"]["p95"] <= single["latency_ms"]["p95"] * 1.10),
+        "completed_all": (
+            single["completed"] == fleet["completed"] == n_req
+            and single["duplicates"] == fleet["duplicates"] == 0),
+    }
+
+
 def serving_workload(fast: bool) -> dict:
     """Workload B: engine wall-time under each placement policy."""
     cfg = reduced(get_config("qwen2-0.5b"))
@@ -342,7 +415,17 @@ def run(
         f"p95={d['warm']['tail_p95_ms']}ms\n"
         f"fleet warm start skips exploration: {d['warm_explores_zero']}"
     )
-    return {"kernel": a, "serving": b, "warm_start": c, "fleet": d}
+
+    print("\n-- workload E: routed replica fleet (repro.router) --")
+    e = router_workload(fast)
+    print(
+        f"tail p95: single replica={e['single_tail_p95_ms']}ms | "
+        f"2 routed replicas={e['routed_tail_p95_ms']}ms "
+        f"(route overhead {e['route_overhead_ms']}ms/req)\n"
+        f"routed spread: {e['routed_by_replica']}; all completed: "
+        f"{e['completed_all']}; routed tail <= single: {e['routed_tail_le_single']}"
+    )
+    return {"kernel": a, "serving": b, "warm_start": c, "fleet": d, "router": e}
 
 
 def main() -> None:

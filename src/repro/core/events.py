@@ -76,7 +76,7 @@ def span_scope(span: int) -> Iterator[int]:
 @dataclasses.dataclass(frozen=True)
 class Event:
     t: float  # monotonic seconds
-    kind: str  # spawn | exit | probe | mark | dispatch | straggler | device
+    kind: str  # spawn | exit | probe | mark | dispatch | route | straggler | device
     name: str  # e.g. "step", "microbatch", "request", probe target
     payload: Any = None
     span: int = 0  # pairs spawn/exit of one unit; 0 = unspanned (legacy)

@@ -21,15 +21,36 @@ Typical use::
     disp = Dispatcher(DispatchConfig(policy="profiled"), log=log)
     out = disp.dispatch("decode_step", {"chunked": f1, "ref": f2}, *args)
 """
-from repro.dispatch.cost import CostEstimate, estimate_callable, estimate_region, estimate_sdfg
-from repro.dispatch.dispatcher import DispatchConfig, DispatchDecision, Dispatcher, with_impl
 from repro.dispatch.profiles import ProfileStore, signature
-from repro.dispatch.registry import (
-    BackendRegistry,
-    BackendTarget,
-    default_registry,
-    host_registry,
-)
+
+# Everything else imports jax at module level; re-export lazily (PEP 562) so
+# jax-free consumers of ProfileStore — the trace session loader, the fleet
+# client/daemon, the router's cost seeding — don't drag jax in.  The actual
+# dispatcher always runs next to an engine, which already paid for jax.
+_LAZY = {
+    "CostEstimate": "repro.dispatch.cost",
+    "estimate_callable": "repro.dispatch.cost",
+    "estimate_region": "repro.dispatch.cost",
+    "estimate_sdfg": "repro.dispatch.cost",
+    "DispatchConfig": "repro.dispatch.dispatcher",
+    "DispatchDecision": "repro.dispatch.dispatcher",
+    "Dispatcher": "repro.dispatch.dispatcher",
+    "with_impl": "repro.dispatch.dispatcher",
+    "BackendRegistry": "repro.dispatch.registry",
+    "BackendTarget": "repro.dispatch.registry",
+    "default_registry": "repro.dispatch.registry",
+    "host_registry": "repro.dispatch.registry",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)
+
 
 __all__ = [
     "BackendRegistry",

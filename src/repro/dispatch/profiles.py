@@ -21,10 +21,14 @@ from __future__ import annotations
 import dataclasses
 import json
 import threading
-from typing import Any, Optional
+from typing import TYPE_CHECKING, Any, Optional
 
 from repro.core.events import EventLog
-from repro.core.overhead import TimingStats
+
+if TYPE_CHECKING:  # annotation-only: repro.core.overhead imports jax, and
+    # the ProfileStore must stay loadable from jax-free processes (fleet
+    # daemon/client, trace session loader, router cost seeding)
+    from repro.core.overhead import TimingStats
 
 
 def signature(*args: Any) -> str:

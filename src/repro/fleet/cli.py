@@ -138,9 +138,9 @@ def cmd_serve(args: argparse.Namespace) -> int:
                       "pid": os.getpid(), "auth": args.token is not None}),
           flush=True)
     if args.ready_file:
-        from repro.utils.io import atomic_write
+        from repro.utils.ready import write_ready_file
 
-        atomic_write(args.ready_file, server.url)  # readers never see a torn URL
+        write_ready_file(args.ready_file, server.url)
     try:
         server.serve_forever()
     except KeyboardInterrupt:

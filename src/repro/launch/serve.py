@@ -106,6 +106,10 @@ def main() -> None:
                          "self-measured record-path overhead under PCT%% "
                          "(0 = always-on: measure, never shed; default 5 "
                          "when --metrics-port is given)")
+    ap.add_argument("--ready-file", default=None, metavar="PATH",
+                    help="announce the /metrics URL here once the listener "
+                         "is up (requires --metrics-port; shared handshake "
+                         "with repro.fleet serve and repro.router)")
     ap.add_argument("--metrics-linger-s", type=float, default=0.0, metavar="S",
                     help="keep the /metrics listener up S seconds after the "
                          "run completes (scrape windows for CI/cron)")
@@ -152,6 +156,12 @@ def main() -> None:
         import sys
 
         print(f"metrics: {mserver.url}/metrics", file=sys.stderr)
+        if args.ready_file:
+            from repro.utils.ready import write_ready_file
+
+            write_ready_file(args.ready_file, mserver.url)
+    elif args.ready_file:
+        ap.error("--ready-file requires --metrics-port (nothing to announce)")
     prof = None
     if args.jax_profile:
         from repro.trace.liveprof import LiveDeviceProfiler

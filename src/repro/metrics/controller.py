@@ -25,14 +25,25 @@ import threading
 import time
 from typing import Any, Optional
 
-from repro.core.overhead import TimingStats, hyperfine
+from typing import TYPE_CHECKING
+
 from repro.metrics.registry import MetricsRegistry
+
+if TYPE_CHECKING:
+    from repro.core.overhead import TimingStats
 
 DEFAULT_BUDGET_PCT = 5.0  # the paper's Table I ballpark (+5.1% / +4.8%)
 
 
-def calibrate_noop(runs: int = 256, warmup: int = 64) -> TimingStats:
-    """Cost of a timed call that records nothing — the overhead zero point."""
+def calibrate_noop(runs: int = 256, warmup: int = 64) -> "TimingStats":
+    """Cost of a timed call that records nothing — the overhead zero point.
+
+    ``repro.core.overhead`` imports jax; deferring it here keeps the metrics
+    plane importable from jax-free processes (router front door, synthetic
+    replicas, the fleet daemon) — only a run that *starts* the adaptive
+    controller pays for jax."""
+    from repro.core.overhead import hyperfine
+
     return hyperfine(lambda: None, label="noop", warmup=warmup, runs=runs)
 
 

@@ -18,6 +18,9 @@ Derived series (all prefixed ``repro_``):
   ``repro_device_slices_total{align}`` from merged device slices, plus
   ``repro_device_capture_windows_total`` from the live profiler's
   window-close marks (see :mod:`repro.trace.liveprof`);
+* ``repro_router_requests_total{replica,outcome}`` and
+  ``repro_router_route_ms`` from the router front door's terminal ``route``
+  outcome events (see :mod:`repro.router.frontdoor`);
 * ``repro_stragglers_total``, ``repro_trace_controller_events_total``;
 * ``repro_trace_events_total{kind}`` for the raw stream.
 
@@ -70,6 +73,8 @@ class MetricsSink:
         self._dispatch_hists: dict[tuple, Histogram] = {}
         self._device_hists: dict[tuple, Histogram] = {}
         self._device_counters: dict[str, Counter] = {}
+        self._router_counters: dict[tuple, Counter] = {}
+        self._route_hist: Optional[Histogram] = None
         self._capture_windows = registry.counter(
             "repro_device_capture_windows_total",
             "live device-capture windows merged")
@@ -154,6 +159,28 @@ class MetricsSink:
                         device=hkey[0], op=hkey[1])
                     self._device_hists[hkey] = h
                 h.observe(float(dur) * 1e3)
+        elif e.kind == "route":
+            # only the terminal per-request outcome counts a request; the
+            # per-attempt "route" decision events would overcount retries
+            if e.name != "outcome":
+                return
+            p = e.payload if isinstance(e.payload, dict) else {}
+            key = (str(p.get("replica")), str(p.get("outcome")))
+            c = self._router_counters.get(key)
+            if c is None:
+                c = self.registry.counter(
+                    "repro_router_requests_total",
+                    "routed requests by terminal outcome",
+                    replica=key[0], outcome=key[1])
+                self._router_counters[key] = c
+            c.inc()
+            route_ms = p.get("route_ms")
+            if isinstance(route_ms, (int, float)):
+                if self._route_hist is None:
+                    self._route_hist = self.registry.histogram(
+                        "repro_router_route_ms",
+                        "routing-decision overhead per request (ms)")
+                self._route_hist.observe(float(route_ms))
         elif e.name == "device_window":
             p = e.payload if isinstance(e.payload, dict) else {}
             if "events" in p:  # window-close marks only (not start/warning)

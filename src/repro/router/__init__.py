@@ -1,0 +1,49 @@
+"""repro.router — a replica fleet behind a profile-guided front door.
+
+The system-level tier over :mod:`repro.serving`: the engine becomes a
+replica (:mod:`.replica` — an HTTP front over the continuous-batching
+engine, or the deterministic synthetic engine for accelerator-free CI), a
+supervisor keeps N of them alive (:mod:`.manager` — ready-file handshake,
+healthz liveness, restart with exponential backoff), and a cost model picks
+where each request class runs best (:mod:`.cost` — fleet (git SHA, chip)
+profile seeds, then live per-replica EWMA latency, argmin with least-loaded
+tie-breaking and bounded-queue admission control).  :mod:`.frontdoor` is the
+single listener tying them together with drain-then-retry exactly-once
+forwarding; :mod:`.loadgen` drives and verifies it.
+"""
+from repro.router.cost import (
+    DEFAULT_COST_S,
+    CostRouter,
+    NoReplicaAvailable,
+    RouteDecision,
+    RouterBusy,
+    SeedCosts,
+    class_of,
+    seed_costs_from_store,
+)
+from repro.router.frontdoor import FrontDoorServer, forward_generate, make_frontdoor
+from repro.router.manager import ReplicaHandle, ReplicaManager
+from repro.router.replica import (
+    ReplicaServer,
+    SyntheticEngine,
+    expected_synthetic_tokens,
+)
+
+__all__ = [
+    "DEFAULT_COST_S",
+    "CostRouter",
+    "FrontDoorServer",
+    "NoReplicaAvailable",
+    "ReplicaHandle",
+    "ReplicaManager",
+    "ReplicaServer",
+    "RouteDecision",
+    "RouterBusy",
+    "SeedCosts",
+    "SyntheticEngine",
+    "class_of",
+    "expected_synthetic_tokens",
+    "forward_generate",
+    "make_frontdoor",
+    "seed_costs_from_store",
+]

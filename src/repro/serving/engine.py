@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from typing import Any, Optional
 
 import jax
@@ -83,6 +84,10 @@ class Engine:
         self.cur_pos = np.zeros(B, np.int32)  # next position per slot
         self.active: list[Optional[Request]] = [None] * B
         self.queue: list[Request] = []
+        # submit() is called from HTTP handler threads when the engine runs
+        # behind a repro.router replica; the queue hand-off is the only state
+        # shared with the engine-loop thread (active/caches stay loop-owned)
+        self._queue_lock = threading.Lock()
         self._rid = itertools.count()
         self._key = jax.random.PRNGKey(scfg.seed)
 
@@ -143,15 +148,22 @@ class Engine:
     def submit(self, prompt: list[int], max_new: int = 32) -> int:
         req = Request(next(self._rid), list(prompt), max_new,
                       span=next_span_id(), parent=current_span())
-        self.queue.append(req)
+        with self._queue_lock:
+            self.queue.append(req)
+            depth = len(self.queue)
         # span id pairs this spawn with the exit in _decode_tick even when
         # requests interleave (exporters and durations() pair by span first);
         # the parent captured at submit keeps the request under the driver's
         # run span even though its exit lands ticks later on another path
         self.log.record("spawn", "request", req.rid, span=req.span, parent=req.parent)
         if self._g_queue is not None:
-            self._g_queue.set(len(self.queue))
+            self._g_queue.set(depth)
         return req.rid
+
+    def pending(self) -> int:
+        """Requests not yet delivered (queued + occupying a decode slot)."""
+        with self._queue_lock:
+            return len(self.queue) + sum(r is not None for r in self.active)
 
     def run_to_completion(self) -> dict[int, list[int]]:
         results: dict[int, list[int]] = {}
@@ -170,9 +182,12 @@ class Engine:
 
     def _admit(self) -> None:
         for slot in range(self.scfg.max_batch):
-            if self.active[slot] is not None or not self.queue:
+            if self.active[slot] is not None:
                 continue
-            req = self.queue.pop(0)
+            with self._queue_lock:
+                if not self.queue:
+                    break
+                req = self.queue.pop(0)
             req.slot = slot
             # the prefill (and the dispatch decision it triggers) must nest
             # under the request span, whose bracket events live elsewhere;

@@ -54,6 +54,8 @@ DEFAULT_CAPACITY = 1 << 16  # 65536 events
 TRACK_OF: dict[str, str] = {
     "serve_run": "run",
     "train_run": "run",
+    "router_run": "run",
+    "replica": "router",
     "step": "step",
     "train_step": "step",
     "microbatch": "microbatch",
@@ -70,13 +72,14 @@ TRACK_OF: dict[str, str] = {
 # Host tracks order before device tracks (``device:<name>``, sorted after the
 # canonical set) so viewers render host rows above their device rows.
 TRACKS = ("run", "step", "microbatch", "request", "checkpoint", "dispatch",
-          "controller", "other")
+          "router", "controller", "other")
 
 # Tracks the sampling gate never sheds: rare, tiny, and load-bearing — the
 # run envelope, dispatch/warm-start analysis, recovery lifecycle, and the
 # controller's own decision trail.  Device tracks are also exempt (they are
 # merged post-hoc and already rate-limited at their source).
-ESSENTIAL_TRACKS = frozenset({"run", "dispatch", "checkpoint", "controller"})
+ESSENTIAL_TRACKS = frozenset({"run", "dispatch", "checkpoint", "router",
+                              "controller"})
 
 # Every Nth record() is timed end-to-end (event build + ring + sinks).  The
 # default times EVERY call: two perf_counter reads (~100 ns) against a
@@ -91,6 +94,8 @@ def default_track(e: Event) -> str:
     """Track of an event without a collector (module-level TRACK_OF only)."""
     if e.kind == "dispatch":
         return "dispatch"
+    if e.kind == "route":
+        return "router"
     if e.kind == "device":
         dev = e.payload.get("device") if isinstance(e.payload, dict) else None
         return f"device:{dev}" if dev else "device"
@@ -100,7 +105,7 @@ def default_track(e: Event) -> str:
 # events are rare and small but drive warm-start + recovery analysis — they
 # must survive a request-span flood that wraps the main ring many times over.
 DEFAULT_TRACK_CAPACITY: dict[str, int] = {
-    "dispatch": 4096, "checkpoint": 1024, "controller": 1024,
+    "dispatch": 4096, "checkpoint": 1024, "router": 4096, "controller": 1024,
 }
 
 
@@ -218,6 +223,10 @@ class TraceCollector(EventLog):
     def _track_for(self, kind: str, name: str, payload: Any = None) -> str:
         if kind == "dispatch":
             return "dispatch"
+        if kind == "route":
+            # routing decisions/outcomes mirror dispatch decisions one tier
+            # up: rare, tiny, and load-bearing for accounting — own ring
+            return "router"
         if kind == "device":
             dev = payload.get("device") if isinstance(payload, dict) else None
             return f"device:{dev}" if dev else "device"

@@ -1,21 +1,35 @@
-from repro.utils.io import atomic_write
-from repro.utils.tree import (
-    assert_no_nans,
-    tree_cast,
-    tree_flatten_with_paths,
-    tree_map_with_path,
-    tree_param_count,
-    tree_size_bytes,
-    tree_zeros_like,
-)
+"""Shared helpers: filesystem, daemon handshake, pytree utilities.
 
-__all__ = [
+The pytree helpers (:mod:`repro.utils.tree`) import jax; they are re-exported
+lazily (PEP 562) so jax-free processes — the router front door, synthetic
+replicas, the fleet CLI — can use :mod:`repro.utils.io` and
+:mod:`repro.utils.ready` without paying (or requiring) a jax import.
+"""
+from repro.utils.io import atomic_write
+from repro.utils.ready import read_ready_info, wait_for_ready_file, write_ready_file
+
+_TREE_EXPORTS = frozenset({
     "assert_no_nans",
-    "atomic_write",
     "tree_cast",
     "tree_flatten_with_paths",
     "tree_map_with_path",
     "tree_param_count",
     "tree_size_bytes",
     "tree_zeros_like",
+})
+
+__all__ = [
+    "atomic_write",
+    "read_ready_info",
+    "wait_for_ready_file",
+    "write_ready_file",
+    *sorted(_TREE_EXPORTS),
 ]
+
+
+def __getattr__(name: str):
+    if name in _TREE_EXPORTS:
+        from repro.utils import tree
+
+        return getattr(tree, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
