@@ -73,6 +73,75 @@ def span_scope(span: int) -> Iterator[int]:
         _SPAN_STACK.reset(token)
 
 
+# HTTP header carrying a serialized SpanContext across process boundaries
+# (the W3C traceparent analogue for this framework's span-id space).
+TRACEPARENT_HEADER = "X-Repro-Traceparent"
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanContext:
+    """Serializable cross-process span reference.
+
+    Span ids are process-unique, not globally unique, so a remote reference
+    needs three parts: a ``trace`` id naming the end-to-end request, the
+    parent ``span`` id in the *origin* process's id space, and the ``origin``
+    process identity (``name:pid``) that id space belongs to.  ``sent_unix``
+    is the injector's wall clock at send time — one half of the handshake
+    pair :mod:`repro.trace.stitch` uses to estimate cross-host clock skew.
+
+    The wire format is a single header value (``repro1;trace=..;span=..;
+    origin=..;sent=..``); :meth:`extract` tolerates missing or garbage
+    values by returning ``None`` — propagation is best-effort and must
+    never fail a request.
+    """
+
+    trace: str
+    span: int
+    origin: str
+    sent_unix: float = 0.0
+
+    def inject(self) -> str:
+        """The ``X-Repro-Traceparent`` header value for this context."""
+        origin = self.origin.replace(";", "_").replace("=", "_")
+        return (f"repro1;trace={self.trace};span={self.span};"
+                f"origin={origin};sent={self.sent_unix!r}")
+
+    @classmethod
+    def extract(cls, value: Optional[str]) -> Optional["SpanContext"]:
+        """Parse a header value; ``None`` on anything malformed."""
+        if not value or not value.startswith("repro1;"):
+            return None
+        fields: dict[str, str] = {}
+        for part in value.split(";")[1:]:
+            k, sep, v = part.partition("=")
+            if sep:
+                fields[k.strip()] = v.strip()
+        try:
+            return cls(trace=fields["trace"], span=int(fields["span"]),
+                       origin=fields["origin"],
+                       sent_unix=float(fields.get("sent", 0.0)))
+        except (KeyError, ValueError):
+            return None
+
+    def to_payload(self) -> dict[str, Any]:
+        """The ``remote`` payload convention: embedding this dict under the
+        ``"remote"`` key of a spawn payload marks the span as remotely
+        parented; :func:`repro.trace.collector.resolve_spans` lifts it onto
+        ``Span.remote`` and :mod:`repro.trace.stitch` re-links it to the
+        origin process's span once both sessions are merged."""
+        return {"trace": self.trace, "span": self.span, "origin": self.origin}
+
+
+def remote_ref(payload: Any) -> Optional[dict[str, Any]]:
+    """The remote-parent reference embedded in a span payload, if any."""
+    if isinstance(payload, dict):
+        ref = payload.get("remote")
+        if isinstance(ref, dict) and isinstance(ref.get("span"), int) \
+                and ref.get("origin"):
+            return ref
+    return None
+
+
 @dataclasses.dataclass(frozen=True)
 class Event:
     t: float  # monotonic seconds

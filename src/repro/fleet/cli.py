@@ -5,6 +5,7 @@
   PYTHONPATH=src python -m repro.fleet pull  --fleet fleet_store -o warm.json
   PYTHONPATH=src python -m repro.fleet ls    --fleet http://host:8377
   PYTHONPATH=src python -m repro.fleet gc    --fleet fleet_store --max-age-s 604800
+  PYTHONPATH=src python -m repro.fleet audit --root fleet_store [-n 20] [--json]
 
 ``--fleet`` accepts a daemon URL (``http://host:port``) or a store directory
 path / ``file://`` URL (single-host direct mode — same on-disk format, no
@@ -12,6 +13,10 @@ daemon).  ``push`` takes a bare ProfileStore JSON (``--profile-out``), a
 trace session file (``--trace-out``), or a streaming segment directory
 (``--trace-dir``); the (git SHA, chip) bucket key defaults to the source's
 own provenance and can be overridden with ``--git-sha`` / ``--chip``.
+
+``audit`` tails the daemon's mutation log (``AUDIT.jsonl`` in the store
+root): one record per successful push/gc with the source address, a token
+digest when the daemon ran with ``--token``, and what changed.
 """
 from __future__ import annotations
 
@@ -207,6 +212,38 @@ def cmd_gc(args: argparse.Namespace) -> int:
     return 0
 
 
+def cmd_audit(args: argparse.Namespace) -> int:
+    from repro.fleet.service import read_audit
+
+    recs = read_audit(args.root, n=args.n if args.n > 0 else None)
+    if args.json:
+        print(json.dumps({"records": recs}, indent=1))
+        return 0
+    if not recs:
+        print("(no audit records)")
+        return 0
+    print(f"{'t':>14}  {'verb':<5}{'addr':<16}{'token_sha':<13}detail")
+    for r in recs:
+        if r.get("verb") == "push":
+            detail = (f"({r.get('git_sha')}, {r.get('chip')}) "
+                      f"entries={r.get('entries')} "
+                      f"merged_samples={r.get('merged_samples')}"
+                      + (f" source={r['source']}" if r.get("source") else ""))
+        elif r.get("verb") == "gc":
+            removed = r.get("removed")
+            detail = (f"removed={len(removed) if isinstance(removed, list) else removed}"
+                      + (f" max_age_s={r['max_age_s']}"
+                         if r.get("max_age_s") is not None else "")
+                      + (f" keep_per_chip={r['keep_per_chip']}"
+                         if r.get("keep_per_chip") is not None else ""))
+        else:
+            detail = json.dumps({k: v for k, v in r.items()
+                                 if k not in ("t", "verb", "addr", "token_sha")})
+        print(f"{r.get('t', 0):>14.3f}  {str(r.get('verb')):<5}"
+              f"{str(r.get('addr')):<16}{str(r.get('token_sha', '-')):<13}{detail}")
+    return 0
+
+
 def _add_fleet_arg(p: argparse.ArgumentParser) -> None:
     p.add_argument("--fleet", required=True, metavar="URL|DIR",
                    help="daemon URL (http://host:port) or store directory")
@@ -263,6 +300,13 @@ def main(argv: Optional[list[str]] = None) -> int:
                    help="keep only the newest N buckets per chip")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=cmd_gc)
+
+    p = sub.add_parser("audit", help="tail the store's push/gc audit log")
+    p.add_argument("--root", required=True, help="store directory")
+    p.add_argument("-n", type=int, default=20, metavar="N",
+                   help="show the last N records (0 = all)")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=cmd_audit)
 
     args = ap.parse_args(argv)
     try:

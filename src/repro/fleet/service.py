@@ -23,12 +23,21 @@ the Welford state.  Rejections are 401s, counted in the daemon's stats
 ``/healthz`` and ``/metrics`` read the **same**
 :class:`~repro.metrics.registry.MetricsRegistry` counters — there is one
 counter source, so the two surfaces can never drift apart.
+
+Every successful mutating verb is also appended to ``AUDIT.jsonl`` in the
+store root — who (source address + a token digest, never the token itself)
+changed what (git_sha/chip/sample counts for push, removal count for gc)
+and when.  ``python -m repro.fleet audit --root DIR`` tails it.
 """
 from __future__ import annotations
 
+import hashlib
 import hmac
 import json
+import os
 import sys
+import threading
+import time
 import urllib.parse
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Optional
@@ -39,6 +48,27 @@ from repro.metrics.http import PROM_CONTENT_TYPE
 from repro.metrics.registry import MetricsRegistry
 
 MAX_PUSH_BYTES = 64 << 20  # a merged ProfileStore is KBs; 64 MiB is generous
+
+AUDIT_NAME = "AUDIT.jsonl"  # one JSON record per successful push/gc
+
+
+def read_audit(root: str, n: Optional[int] = None) -> list[dict[str, Any]]:
+    """The last ``n`` audit records of a fleet store (all when ``n`` is
+    None); missing file means no mutations yet, not an error.  Torn final
+    lines (daemon killed mid-append) are skipped."""
+    path = os.path.join(root, AUDIT_NAME)
+    if not os.path.exists(path):
+        return []
+    out: list[dict[str, Any]] = []
+    with open(path) as f:
+        for line in f:
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(rec, dict):
+                out.append(rec)
+    return out[-n:] if n is not None else out
 
 # Daemon verb counters; /healthz reports them under these short keys, the
 # Prometheus surface as repro_fleet_<key>_total — same Counter objects.
@@ -57,6 +87,8 @@ class FleetServer(ThreadingHTTPServer):
         self.fleet = fleet
         self.quiet = quiet
         self.token = token
+        self.audit_path = os.path.join(fleet.root, AUDIT_NAME)
+        self._audit_lock = threading.Lock()
         # single counter source for /healthz AND /metrics: a parallel dict
         # would inevitably drift from the scraped series
         self.metrics = MetricsRegistry()
@@ -67,6 +99,25 @@ class FleetServer(ThreadingHTTPServer):
 
     def count(self, key: str) -> None:
         self.metrics.counter(f"repro_fleet_{key}_total").inc()
+
+    def audit(self, verb: str, addr: str, **fields: Any) -> None:
+        """Append one audit record for a successful mutating verb.
+
+        The token is recorded as a short sha256 digest — enough to tell two
+        writers apart without persisting the secret itself.  Append + flush
+        per record: a killed daemon loses at most its torn final line
+        (which ``read_audit`` skips).
+        """
+        rec: dict[str, Any] = {"t": round(time.time(), 3), "verb": verb,
+                               "addr": addr}
+        if self.token is not None:
+            rec["token_sha"] = hashlib.sha256(
+                self.token.encode()).hexdigest()[:12]
+        rec.update({k: v for k, v in fields.items() if v is not None})
+        line = json.dumps(rec, sort_keys=True) + "\n"
+        with self._audit_lock, open(self.audit_path, "a") as f:
+            f.write(line)
+            f.flush()
 
     def stats_snapshot(self) -> dict[str, int]:
         return {key: int(self.metrics.counter(f"repro_fleet_{key}_total").value)
@@ -197,15 +248,26 @@ class _Handler(BaseHTTPRequestHandler):
                     return
                 store = ProfileStore.from_json(json.dumps(raw))
                 self.server.count("pushes")
-                self._send(200, self.server.fleet.push(
+                res = self.server.fleet.push(
                     store, git_sha, chip,
-                    source=body.get("source"), seq=body.get("seq")))
+                    source=body.get("source"), seq=body.get("seq"))
+                self.server.audit(
+                    "push", self.client_address[0],
+                    git_sha=git_sha, chip=chip, source=body.get("source"),
+                    entries=len(store),
+                    merged_samples=res.get("merged_samples")
+                    if isinstance(res, dict) else None)
+                self._send(200, res)
             elif url.path == "/v1/gc":
                 self.server.count("gcs")
                 removed = self.server.fleet.gc(
                     max_age_s=body.get("max_age_s"),
                     keep_per_chip=body.get("keep_per_chip"),
                 )
+                self.server.audit(
+                    "gc", self.client_address[0],
+                    max_age_s=body.get("max_age_s"),
+                    keep_per_chip=body.get("keep_per_chip"), removed=removed)
                 self._send(200, {"removed": removed})
             else:
                 self._error(404, f"unknown path {url.path}")

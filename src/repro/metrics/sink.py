@@ -75,6 +75,8 @@ class MetricsSink:
         self._device_counters: dict[str, Counter] = {}
         self._router_counters: dict[tuple, Counter] = {}
         self._route_hist: Optional[Histogram] = None
+        self._hop_hists: dict[str, Histogram] = {}
+        self._hop_mismatch: Optional[Counter] = None
         self._capture_windows = registry.counter(
             "repro_device_capture_windows_total",
             "live device-capture windows merged")
@@ -181,6 +183,36 @@ class MetricsSink:
                         "repro_router_route_ms",
                         "routing-decision overhead per request (ms)")
                 self._route_hist.observe(float(route_ms))
+            hops = p.get("hops")
+            if isinstance(hops, dict):
+                # per-hop latency decomposition (frontdoor_queue | network |
+                # replica_queue | service); the four telescope to the
+                # end-to-end latency, so a sum drifting past 5% of latency_ms
+                # means a hop was measured wrong — count it, don't hide it
+                total = 0.0
+                for hop in ("frontdoor_queue", "network", "replica_queue",
+                            "service"):
+                    v = hops.get(hop)
+                    if not isinstance(v, (int, float)):
+                        continue
+                    total += float(v)
+                    h = self._hop_hists.get(hop)
+                    if h is None:
+                        h = self.registry.histogram(
+                            "repro_router_hop_ms",
+                            "per-hop request latency decomposition (ms)",
+                            hop=hop)
+                        self._hop_hists[hop] = h
+                    h.observe(max(0.0, float(v)))
+                lat = p.get("latency_ms")
+                if (isinstance(lat, (int, float)) and lat > 0
+                        and abs(total - float(lat)) > 0.05 * float(lat)):
+                    if self._hop_mismatch is None:
+                        self._hop_mismatch = self.registry.counter(
+                            "repro_router_hop_sum_mismatch_total",
+                            "requests whose hop decomposition failed to sum "
+                            "to end-to-end latency (within 5%)")
+                    self._hop_mismatch.inc()
         elif e.name == "device_window":
             p = e.payload if isinstance(e.payload, dict) else {}
             if "events" in p:  # window-close marks only (not start/warning)

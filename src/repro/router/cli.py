@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import signal
 import sys
 import threading
@@ -98,6 +99,15 @@ def main(argv: Optional[list[str]] = None) -> int:
             replica_argv += ["--fleet", args.fleet]
             if args.fleet_token:
                 replica_argv += ["--fleet-token", args.fleet_token]
+    if args.trace_dir:
+        # every replica streams its own session under <trace-dir>/replicas/
+        # (each picks a fresh <name>-<pid> subdir per incarnation, so
+        # supervisor restarts never collide); the frontdoor manifest lists
+        # the announced dirs so `repro.trace stitch <trace-dir>` finds the
+        # whole fleet from one path
+        replica_argv += ["--trace-dir-root",
+                         os.path.join(args.trace_dir, "replicas"),
+                         "--trace-rotate", str(args.trace_rotate)]
 
     log = TraceCollector()
     plane = MetricsPlane(log)
@@ -110,7 +120,8 @@ def main(argv: Optional[list[str]] = None) -> int:
             args.trace_dir,
             rotate_events=args.trace_rotate,
             max_segments=args.trace_rotate_keep,
-            meta={"driver": "router", "replicas": args.replicas},
+            meta={"driver": "router", "replicas": args.replicas,
+                  "origin": f"frontdoor:{os.getpid()}"},
             metrics_provider=plane.snapshot,
         ).attach(log)
 
@@ -142,10 +153,17 @@ def main(argv: Optional[list[str]] = None) -> int:
         print(f"router: {name} fleet seed ({key[0]}, {key[1]}) -> {match}"
               f"{' (priced)' if priced else ''}", file=sys.stderr)
 
+    replica_sessions: list[dict] = []
+
     def on_up(name: str, url: str, info: dict) -> None:
         router.add_replica(name)
         seed_from_fleet(name, info)
         router.mark_up(name, url)
+        td = info.get("trace_dir")
+        if stream is not None and td and not any(
+                r["trace_dir"] == td for r in replica_sessions):
+            replica_sessions.append({"replica": name, "trace_dir": td})
+            stream.set_meta("replica_sessions", list(replica_sessions))
 
     def on_down(name: str, reason: str) -> None:
         router.mark_down(name)
@@ -177,6 +195,7 @@ def main(argv: Optional[list[str]] = None) -> int:
     front.manager = manager
     front.plane = plane
     front.run_span = run_span
+    front.origin = f"frontdoor:{os.getpid()}"
     front.request_timeout_s = args.request_timeout_s
     front.forward_timeout_s = args.forward_timeout_s
     threading.Thread(target=front.serve_forever, name="frontdoor",

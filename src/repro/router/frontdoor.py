@@ -26,14 +26,17 @@ from __future__ import annotations
 
 import http.client
 import json
+import os
 import socket
 import time
 import urllib.error
 import urllib.request
+import uuid
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Optional
 from urllib.parse import urlparse
 
+from repro.core.events import SpanContext, TRACEPARENT_HEADER, next_span_id
 from repro.router.cost import NoReplicaAvailable, RouterBusy, class_of
 
 PROM_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
@@ -47,7 +50,8 @@ class ForwardFailed(RuntimeError):
     """The replica answered, but with an error/timeout — do not mark it dead."""
 
 
-def forward_generate(url: str, body: bytes, timeout_s: float) -> dict[str, Any]:
+def forward_generate(url: str, body: bytes, timeout_s: float,
+                     headers: Optional[dict[str, str]] = None) -> dict[str, Any]:
     """POST one generate request to a replica, classifying failures.
 
     :class:`ReplicaDead` is raised only for failures that prove the process
@@ -56,10 +60,13 @@ def forward_generate(url: str, body: bytes, timeout_s: float) -> dict[str, Any]:
     connection still up) raises :class:`ForwardFailed`: the replica may
     still be computing, so retrying elsewhere risks double work, and the
     supervisor's healthz probing owns the wedged-replica call.
+
+    ``headers`` adds extra request headers — the front door passes the
+    ``X-Repro-Traceparent`` span context here.
     """
     req = urllib.request.Request(
         f"{url}/v1/generate", data=body, method="POST",
-        headers={"Content-Type": "application/json"})
+        headers={"Content-Type": "application/json", **(headers or {})})
     try:
         with urllib.request.urlopen(req, timeout=timeout_s) as resp:
             return json.loads(resp.read())
@@ -93,6 +100,7 @@ class FrontDoorServer(ThreadingHTTPServer):
     forward_timeout_s: float = 120.0
     request_timeout_s: float = 30.0  # budget for finding a live replica
     requests_seen: int = 0
+    origin: str = ""  # process identity stamped into injected SpanContexts
 
     @property
     def url(self) -> str:
@@ -173,6 +181,8 @@ class FrontDoorHandler(BaseHTTPRequestHandler):
                            prompt: list[int], max_new: int) -> None:
         log, router = srv.log, srv.router
         cls = class_of(len(prompt), max_new)
+        origin = srv.origin or f"frontdoor:{os.getpid()}"
+        trace_id = uuid.uuid4().hex[:16]
         t_req0 = time.perf_counter()
         route_ms = 0.0
         attempts = 0
@@ -189,7 +199,7 @@ class FrontDoorHandler(BaseHTTPRequestHandler):
             log.record("route", "outcome", payload, parent=rspan)
             return payload
 
-        with log.lifecycle("request", {"class": cls},
+        with log.lifecycle("request", {"class": cls, "trace": trace_id},
                            parent=srv.run_span) as rspan:
             while True:
                 t0 = time.perf_counter()
@@ -209,12 +219,23 @@ class FrontDoorHandler(BaseHTTPRequestHandler):
                     time.sleep(0.05)  # replicas mid-restart: wait, re-route
                     continue
                 route_ms += (time.perf_counter() - t0) * 1e3
-                log.record("route", "route", decision.payload(), parent=rspan)
+                # the per-attempt route decision gets its own span id so the
+                # replica's rpc span can name it as a remote parent; the
+                # injected SpanContext's sent_unix + the reply's wall stamps
+                # form the handshake pair stitch uses to estimate clock skew
+                route_span = next_span_id()
+                log.record("route", "route",
+                           {**decision.payload(), "trace": trace_id},
+                           span=route_span, parent=rspan)
+                ctx = SpanContext(trace=trace_id, span=route_span,
+                                  origin=origin, sent_unix=time.time())
                 router.begin(decision.replica)
                 t_fwd = time.perf_counter()
                 try:
                     reply = forward_generate(decision.url, raw,
-                                             srv.forward_timeout_s)
+                                             srv.forward_timeout_s,
+                                             headers={TRACEPARENT_HEADER:
+                                                      ctx.inject()})
                 except ReplicaDead as exc:
                     router.end(decision.replica)
                     router.fail(decision.replica, dead=True)
@@ -238,18 +259,62 @@ class FrontDoorHandler(BaseHTTPRequestHandler):
                         self._send(502, {"error": str(exc), **p})
                         return
                     continue
+                recv_unix = time.time()
                 service_s = time.perf_counter() - t_fwd
                 router.end(decision.replica)
                 router.complete(decision.replica, cls, service_s)
+                extra = self._hop_extra(reply, ctx, recv_unix,
+                                        fwd_ms=service_s * 1e3,
+                                        lat_ms=(time.perf_counter() - t_req0) * 1e3)
                 p = outcome("retried" if attempts else "ok",
-                            decision.replica, rspan)
+                            decision.replica, rspan, **extra)
                 self._send(200, {**reply, "routed_to": decision.replica,
                                  "outcome": p["outcome"],
                                  "route_ms": p["route_ms"],
-                                 "attempts": attempts},
+                                 "attempts": attempts,
+                                 "trace": trace_id,
+                                 "hops": p.get("hops")},
                            headers={"X-Repro-Replica": decision.replica,
                                     "X-Repro-Route-Ms": str(p["route_ms"])})
                 return
+
+    @staticmethod
+    def _hop_extra(reply: dict[str, Any], ctx: SpanContext, recv_unix: float,
+                   *, fwd_ms: float, lat_ms: float) -> dict[str, Any]:
+        """Per-hop latency decomposition + the clock-skew handshake record.
+
+        The four hops telescope — ``frontdoor_queue = latency - forward``,
+        ``network = forward - handler``, ``replica_queue = handler -
+        service`` — so their sum equals the end-to-end latency *by
+        construction*, using only single-clock durations (each term is
+        measured within one process; no cross-host clock appears).  ``hs``
+        carries the four wall timestamps of the forward round trip
+        (frontdoor send/recv, replica recv/send) for stitch's NTP-style
+        offset estimate.
+        """
+        extra: dict[str, Any] = {"latency_ms": round(lat_ms, 3)}
+        rctx = reply.get("ctx")
+        if not isinstance(rctx, dict):
+            return extra  # pre-tracing replica: no decomposition possible
+        try:
+            handler_ms = float(rctx["handler_ms"])
+            service_ms = float(rctx["service_ms"])
+        except (KeyError, TypeError, ValueError):
+            return extra
+        extra["hops"] = {
+            "frontdoor_queue": round(lat_ms - fwd_ms, 3),
+            "network": round(fwd_ms - handler_ms, 3),
+            "replica_queue": round(handler_ms - service_ms, 3),
+            "service": round(service_ms, 3),
+        }
+        extra["hs"] = {
+            "origin": rctx.get("origin"), "span": rctx.get("span"),
+            "trace": ctx.trace,
+            "sent_unix": ctx.sent_unix, "recv_unix": recv_unix,
+            "replica_recv_unix": rctx.get("recv_unix"),
+            "replica_sent_unix": rctx.get("sent_unix"),
+        }
+        return extra
 
 
 def make_frontdoor(host: str = "127.0.0.1", port: int = 0) -> FrontDoorServer:

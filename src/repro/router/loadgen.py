@@ -58,6 +58,7 @@ def run(router_url: str, specs: list[dict[str, Any]], *, concurrency: int = 4,
     by_replica: dict[str, int] = {}
     latencies: list[float] = []
     route_ms: list[float] = []
+    hop_ms: dict[str, list[float]] = {}  # frontdoor's per-hop decomposition
     responses: dict[int, int] = {}  # spec index -> completion count
     verify_failures = 0
     verified = 0
@@ -98,6 +99,10 @@ def run(router_url: str, specs: list[dict[str, Any]], *, concurrency: int = 4,
                 by_replica[rep] = by_replica.get(rep, 0) + 1
                 if isinstance(doc.get("route_ms"), (int, float)):
                     route_ms.append(float(doc["route_ms"]))
+                if isinstance(doc.get("hops"), dict):
+                    for hop, v in doc["hops"].items():
+                        if isinstance(v, (int, float)):
+                            hop_ms.setdefault(hop, []).append(float(v))
                 if good_tokens is not None:
                     verified += 1
                     if not good_tokens:
@@ -139,6 +144,11 @@ def run(router_url: str, specs: list[dict[str, Any]], *, concurrency: int = 4,
             "mean": (round(sum(route_ms) / len(route_ms), 4)
                      if route_ms else None),
             "p95": _percentile(route_ms, 0.95),
+        },
+        "hop_ms": {
+            hop: {"mean": round(sum(vs) / len(vs), 4),
+                  "p95": _percentile(vs, 0.95)}
+            for hop, vs in sorted(hop_ms.items())
         },
         "wall_s": round(wall_s, 3),
     }

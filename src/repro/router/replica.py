@@ -35,7 +35,8 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Optional
 from urllib.parse import urlparse
 
-from repro.core.events import EventLog, current_span, next_span_id, span_scope
+from repro.core.events import (EventLog, SpanContext, TRACEPARENT_HEADER,
+                               current_span, next_span_id, span_scope)
 from repro.metrics import MetricsPlane
 from repro.trace import TraceCollector
 from repro.utils.ready import write_ready_file
@@ -58,6 +59,7 @@ class _SynRequest:
     out: list[int] = dataclasses.field(default_factory=list)
     span: int = 0
     parent: int = 0
+    t_active: float = 0.0  # monotonic instant the request won a decode slot
 
 
 class SyntheticEngine:
@@ -109,7 +111,9 @@ class SyntheticEngine:
         with self._lock:
             for slot in range(self.max_batch):
                 if self.active[slot] is None and self.queue:
-                    self.active[slot] = self.queue.pop(0)
+                    req = self.queue.pop(0)
+                    req.t_active = time.monotonic()
+                    self.active[slot] = req
             live = [r for r in self.active if r is not None]
             if self._g_queue is not None:
                 self._g_queue.set(len(self.queue))
@@ -141,10 +145,13 @@ class ReplicaServer:
 
     One daemon engine-loop thread owns ``step()``; HTTP handler threads
     ``submit()`` (both engines are submit-thread-safe) and block on a shared
-    condition until the loop publishes their rid's tokens.  The request span
-    opened by the handler parents the engine's spawn/exit bracket, so the
-    replica's trace nests request → prefill → dispatch exactly like the
-    single-process driver's.
+    condition until the loop publishes their rid's tokens.  Each handler
+    opens an ``rpc`` span under the run root; the engine's request spawn/exit
+    bracket nests inside it, so the replica's trace reads rpc → request →
+    prefill → dispatch.  When the front door sent an ``X-Repro-Traceparent``
+    header, the rpc span carries that :class:`SpanContext` as its *remote*
+    parent — ``repro.trace stitch`` re-links it under the frontdoor's route
+    span once both sessions are merged.
     """
 
     def __init__(self, engine: Any, *, name: str, log: EventLog,
@@ -153,11 +160,12 @@ class ReplicaServer:
                  info: Optional[dict[str, Any]] = None) -> None:
         self.engine = engine
         self.name = name
+        self.origin = f"{name}:{os.getpid()}"
         self.log = log
         self.plane = plane
         self.info = dict(info or {})
         self.completed = 0
-        self._results: dict[int, list[int]] = {}
+        self._results: dict[int, Any] = {}  # rid -> finished request object
         self._cond = threading.Condition()
         self._stop = threading.Event()
         self.run_span = 0
@@ -206,18 +214,35 @@ class ReplicaServer:
                 continue
             finished = self.engine.step()
             if finished:
+                now = time.monotonic()
                 with self._cond:
                     for r in finished:
-                        self._results[r.rid] = r.out
+                        r.t_done = now  # plain dataclasses: setattr is fine
+                        self._results[r.rid] = r
                         self.completed += 1
                     self._cond.notify_all()
 
     def submit_and_wait(self, prompt: list[int], max_new: int,
-                        timeout_s: float = 120.0) -> tuple[int, list[int]]:
-        # the engine's own request spawn/exit bracket (recorded at submit and
-        # at the completing tick) is the request span — parent it under the
-        # run root exactly like the single-process driver does
-        with span_scope(self.run_span):
+                        timeout_s: float = 120.0,
+                        ctx: Optional[SpanContext] = None,
+                        ) -> tuple[int, list[int], dict[str, Any]]:
+        """Submit one request, block for its tokens; returns ``(rid, tokens,
+        meta)`` where ``meta`` carries the rpc span id plus the queue/service
+        split (``queue_ms`` = submit → decode-slot admission, ``service_ms``
+        = admission → final token) the front door folds into its per-hop
+        latency decomposition.
+        """
+        t_sub = time.monotonic()
+        payload: dict[str, Any] = {"replica": self.name}
+        if ctx is not None:
+            payload["trace"] = ctx.trace
+            payload["remote"] = ctx.to_payload()
+        # the rpc span is this process's anchor for the cross-process chain:
+        # locally it nests under the run root (single-session trees are
+        # unchanged); its payload's "remote" ref names the frontdoor's route
+        # span, and the engine's request bracket nests inside it
+        with span_scope(self.run_span), \
+                self.log.lifecycle("rpc", payload) as rpc_span:
             rid = self.engine.submit(prompt, max_new=max_new)
             with self._cond:
                 self._cond.notify_all()  # wake the engine loop
@@ -228,7 +253,15 @@ class ReplicaServer:
                         raise TimeoutError(
                             f"request {rid} not completed within {timeout_s}s")
                     self._cond.wait(timeout=min(remaining, 0.25))
-                return rid, self._results.pop(rid)
+                r = self._results.pop(rid)
+            t_done = getattr(r, "t_done", time.monotonic())
+            t_active = getattr(r, "t_active", 0.0) or t_done
+            meta = {
+                "span": rpc_span,
+                "queue_ms": round(max(0.0, t_active - t_sub) * 1e3, 3),
+                "service_ms": round(max(0.0, t_done - t_active) * 1e3, 3),
+            }
+            return rid, r.out, meta
 
     def health(self) -> dict[str, Any]:
         return {
@@ -286,6 +319,7 @@ class _ReplicaHandler(BaseHTTPRequestHandler):
         if path != "/v1/generate":
             self._send(404, {"error": "not found"})
             return
+        recv_unix = time.time()  # replica-side handshake stamp (wall clock)
         try:
             n = int(self.headers.get("Content-Length") or 0)
             body = json.loads(self.rfile.read(n) or b"{}")
@@ -298,13 +332,27 @@ class _ReplicaHandler(BaseHTTPRequestHandler):
             if max_new < 1:
                 self._send(400, {"error": "max_new must be >= 1"})
                 return
+            ctx = SpanContext.extract(self.headers.get(TRACEPARENT_HEADER))
             t0 = time.perf_counter()
-            rid, tokens = rep.submit_and_wait(prompt, max_new)
+            rid, tokens, meta = rep.submit_and_wait(prompt, max_new, ctx=ctx)
+            handler_ms = round((time.perf_counter() - t0) * 1e3, 3)
             self._send(200, {
                 "rid": rid,
                 "tokens": tokens,
                 "replica": rep.name,
-                "latency_ms": round((time.perf_counter() - t0) * 1e3, 3),
+                "latency_ms": handler_ms,
+                # everything the front door needs to decompose this hop and
+                # to skew-correct this replica's clock at stitch time
+                "ctx": {
+                    "origin": rep.origin,
+                    "span": meta["span"],
+                    "trace": ctx.trace if ctx else None,
+                    "recv_unix": recv_unix,
+                    "sent_unix": time.time(),
+                    "handler_ms": handler_ms,
+                    "queue_ms": meta["queue_ms"],
+                    "service_ms": meta["service_ms"],
+                },
             })
         except TimeoutError as exc:
             self._send(504, {"error": str(exc)})
@@ -378,6 +426,13 @@ def main(argv: Optional[list[str]] = None) -> int:
                     help="warm-start dispatch profiles from a fleet target")
     ap.add_argument("--fleet-token", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-dir-root", default=None, metavar="DIR",
+                    help="stream this replica's trace into DIR/<name>-<pid>/ "
+                         "(a fresh dir per incarnation so supervisor restarts "
+                         "never collide); the dir is announced in the ready "
+                         "file for `repro.trace stitch` auto-discovery")
+    ap.add_argument("--trace-rotate", type=int, default=2048, metavar="N",
+                    help="events per streamed segment")
     args = ap.parse_args(argv)
     if not args.synthetic and not args.arch:
         ap.error("--arch is required unless --synthetic")
@@ -398,6 +453,20 @@ def main(argv: Optional[list[str]] = None) -> int:
         info.setdefault("chip", default_chip().name)
     info.update({"git_sha": git_sha(), "synthetic": bool(args.synthetic)})
 
+    stream = None
+    if args.trace_dir_root:
+        from repro.trace.stream import StreamingSession
+
+        trace_dir = os.path.join(args.trace_dir_root,
+                                 f"{args.name}-{os.getpid()}")
+        stream = StreamingSession(
+            trace_dir, rotate_events=args.trace_rotate,
+            meta={"driver": "replica", "replica": args.name,
+                  "origin": f"{args.name}:{os.getpid()}"},
+            metrics_provider=plane.snapshot,
+        ).attach(log)
+        info["trace_dir"] = trace_dir
+
     server = ReplicaServer(engine, name=args.name, log=log, plane=plane,
                            host=args.host, port=args.port, info=info).start()
     announce = {"url": server.url, "pid": os.getpid(), "name": args.name,
@@ -412,6 +481,8 @@ def main(argv: Optional[list[str]] = None) -> int:
     while not stop.is_set():
         stop.wait(0.2)
     server.stop()
+    if stream is not None:
+        stream.close(stats=log.stats())
     print(json.dumps({"replica": args.name, "completed": server.completed,
                       "shutdown": True}), file=sys.stderr, flush=True)
     return 0

@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+import time
 from typing import Any, Optional
 
 import jax
@@ -52,6 +53,7 @@ class Request:
     done: bool = False
     span: int = 0  # trace span id shared by the request's spawn/exit events
     parent: int = 0  # enclosing span at submit time (e.g. the driver's run span)
+    t_active: float = 0.0  # monotonic instant the request won a decode slot
 
 
 class Engine:
@@ -189,6 +191,7 @@ class Engine:
                     break
                 req = self.queue.pop(0)
             req.slot = slot
+            req.t_active = time.monotonic()
             # the prefill (and the dispatch decision it triggers) must nest
             # under the request span, whose bracket events live elsewhere;
             # the device annotation stamps the prefill span id onto every

@@ -18,7 +18,10 @@ The observability layer over :mod:`repro.core.events`:
 * :mod:`repro.trace.liveprof` — live duty-cycled device profiling: capture
   windows under the overhead budget, merged into the running trace with
   exact ``span=`` annotation alignment;
-* :mod:`repro.trace.cli` — ``python -m repro.trace {report,export,diff,compact,device}``.
+* :mod:`repro.trace.stitch` — cross-process session stitching (span-id
+  namespacing, handshake clock-skew correction, remote-parent re-linking)
+  plus per-hop latency decomposition over the stitched chain;
+* :mod:`repro.trace.cli` — ``python -m repro.trace {report,export,diff,compact,device,stitch,hops}``.
 """
 from repro.trace.collector import Span, SpanNode, TraceCollector, resolve_spans, span_tree
 from repro.trace.device import (
@@ -45,6 +48,13 @@ from repro.trace.session import (
     path_diff,
     path_regressions,
     session_regressions,
+)
+from repro.trace.stitch import (
+    chain_report,
+    hop_rows,
+    hop_summary,
+    stitch,
+    stitch_sessions,
 )
 from repro.trace.stream import (
     StreamingSession,
@@ -73,6 +83,11 @@ __all__ = [
     "Session",
     "StreamingSession",
     "age_out_profiles",
+    "chain_report",
+    "hop_rows",
+    "hop_summary",
+    "stitch",
+    "stitch_sessions",
     "artifact_meta",
     "artifact_regressions",
     "diff_artifacts",

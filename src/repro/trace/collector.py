@@ -45,7 +45,8 @@ import time
 from collections import deque
 from typing import Any, Callable, Iterable, Mapping, Optional
 
-from repro.core.events import Event, EventLog, _pair_key, current_span
+from repro.core.events import (Event, EventLog, _pair_key, current_span,
+                               remote_ref)
 
 DEFAULT_CAPACITY = 1 << 16  # 65536 events
 
@@ -60,6 +61,7 @@ TRACK_OF: dict[str, str] = {
     "train_step": "step",
     "microbatch": "microbatch",
     "request": "request",
+    "rpc": "request",
     "prefill": "request",
     "decode_tick": "request",
     "checkpoint": "checkpoint",
@@ -116,6 +118,14 @@ class Span:
     ``parent`` is the enclosing span's id (0 = root); ``truncated`` marks a
     span force-closed at the last observed event time because its exit was
     evicted from the ring (or the trace was cut while it was open).
+
+    ``remote`` is the cross-process parent reference (the
+    :meth:`repro.core.events.SpanContext.to_payload` dict lifted from the
+    spawn payload's ``"remote"`` key) — the parent span lives in *another*
+    process's id space and is not required to exist locally.  ``parent``
+    stays the local enclosing span so single-session trees render unchanged;
+    :mod:`repro.trace.stitch` re-points ``parent`` at the remote span once
+    both sessions share one id space.
     """
 
     name: str
@@ -126,6 +136,7 @@ class Span:
     span: int = 0
     parent: int = 0
     truncated: bool = False
+    remote: Optional[dict] = None
 
     @property
     def dur(self) -> float:
@@ -502,7 +513,8 @@ def resolve_spans(
                 s = stack_by_name[e.name].pop()
             else:
                 continue  # exit without a visible spawn (evicted from ring)
-            out.append(Span(e.name, track_name(s), s.t, e.t, s.payload, s.span, s.parent))
+            out.append(Span(e.name, track_name(s), s.t, e.t, s.payload, s.span,
+                            s.parent, remote=remote_ref(s.payload)))
         else:
             p = e.payload
             if e.kind == "dispatch" and isinstance(p, dict) and isinstance(
@@ -521,7 +533,7 @@ def resolve_spans(
         for s in opened:
             track = track_name(s)
             out.append(Span(s.name, track, s.t, t_last, s.payload, s.span,
-                            s.parent, truncated=True))
+                            s.parent, truncated=True, remote=remote_ref(s.payload)))
             if orphans is not None:
                 orphans[track] = orphans.get(track, 0) + 1
     out.sort(key=lambda s: s.t0)

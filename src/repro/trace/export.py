@@ -85,12 +85,45 @@ def to_chrome_trace(
 
     Timestamps are microseconds relative to the first event (Perfetto is
     happiest with small positive ``ts``).
+
+    Stitched sessions (``meta["stitch"]``, see :mod:`repro.trace.stitch`)
+    render **multi-process**: each input session's span-id range maps to its
+    own Perfetto pid named by the process origin, and every re-linked
+    cross-process parent link (a replica rpc span under a frontdoor route
+    span) gets an ``s``/``f`` flow arrow crossing the two processes.
+    Sessions without stitch metadata render exactly as before (one pid).
     """
     events = sorted(events, key=lambda e: e.t)
     track_name = _tracker(collector)
     tids = _track_ids(track_name(e) for e in events)
     parents = _parent_index(events)
     spawn_of = {e.span: e for e in events if e.kind == "spawn" and e.span}
+    # any span-carrying, non-exit event (route instants included): flow-arrow
+    # sources for cross-process parent links
+    span_event_of: dict[int, Event] = {}
+    for e in events:
+        if e.span and e.kind != "exit":
+            span_event_of.setdefault(e.span, e)
+
+    # (lo, hi, pid, origin) per stitched input session, from the provenance
+    # manifest's namespaced span-id ranges
+    procs: list[tuple[int, int, int, str]] = []
+    for i, inp in enumerate(((meta or {}).get("stitch") or {}).get("inputs", [])):
+        ids = inp.get("span_ids") or [0, -1]
+        procs.append((int(ids[0]), int(ids[1]), i + 1,
+                      str(inp.get("origin") or f"proc{i}")))
+
+    def pid_of_id(sid: int) -> int:
+        for lo, hi, pid, _ in procs:
+            if lo <= sid <= hi:
+                return pid
+        return PID
+
+    def pid_of(e: Event) -> int:
+        if not procs:
+            return PID
+        sid = e.span or e.parent
+        return pid_of_id(sid) if sid else procs[0][2]
 
     def start_of(e: Event) -> float:
         # dispatch events are recorded at completion; their X row starts
@@ -101,13 +134,26 @@ def to_chrome_trace(
             return e.t - e.payload["measured_s"]
         return e.t
 
+    def proc_root_of(span: int) -> int:
+        """Topmost ancestor of ``span`` *within its own process* — async
+        grouping must not follow a re-linked parent into another pid
+        (Perfetto scopes async ids per pid)."""
+        seen = set()
+        while span in parents and span not in seen:
+            p = parents[span]
+            if procs and pid_of_id(p) != pid_of_id(span):
+                break
+            seen.add(span)
+            span = p
+        return span
+
     def async_id(e: Event) -> Optional[str]:
         """Async grouping id for spawn/exit.  Parent-linked spans share their
         ROOT span's id, so Perfetto nests the whole subtree by timestamp on
         one async track — real parent nesting, not per-tid LIFO guessing.
         Unlinked spans fall back to their own id / payload identity."""
         if e.span:
-            return str(_root_of(e.span, parents))
+            return str(proc_root_of(e.span))
         try:
             hash(e.payload)
         except TypeError:
@@ -135,16 +181,25 @@ def to_chrome_trace(
     t0 = min((start_of(e) for e in events), default=0.0)
     us = lambda t: round((t - t0) * 1e6, 3)  # noqa: E731
 
-    rows: list[dict[str, Any]] = [
-        {"ph": "M", "pid": PID, "name": "process_name", "args": {"name": "repro"}}
-    ]
-    for track, tid in tids.items():
-        rows.append({"ph": "M", "pid": PID, "tid": tid, "name": "thread_name",
-                     "args": {"name": track}})
+    rows: list[dict[str, Any]] = []
+    if procs:
+        for _, _, pid, origin in procs:
+            rows.append({"ph": "M", "pid": pid, "name": "process_name",
+                         "args": {"name": origin}})
+        for pid, track in sorted({(pid_of(e), track_name(e)) for e in events}):
+            rows.append({"ph": "M", "pid": pid, "tid": tids[track],
+                         "name": "thread_name", "args": {"name": track}})
+    else:
+        rows.append({"ph": "M", "pid": PID, "name": "process_name",
+                     "args": {"name": "repro"}})
+        for track, tid in tids.items():
+            rows.append({"ph": "M", "pid": PID, "tid": tid, "name": "thread_name",
+                         "args": {"name": track}})
     n_flows = 0
     for e in events:
         tid = tids[track_name(e)]
-        base = {"name": e.name, "pid": PID, "tid": tid, "ts": us(e.t),
+        pid = pid_of(e)
+        base = {"name": e.name, "pid": pid, "tid": tid, "ts": us(e.t),
                 "args": _payload_args(e.payload)}
         if e.span:
             base["args"]["span"] = e.span
@@ -160,6 +215,18 @@ def to_chrome_trace(
             if aid:
                 row["id"] = aid
             rows.append(row)
+            if e.kind == "spawn" and procs and e.parent:
+                # re-linked remote parent: draw the hop crossing processes
+                src = span_event_of.get(e.parent)
+                if src is not None and pid_of(src) != pid:
+                    n_flows += 1
+                    fid = str(n_flows)
+                    rows.append({"ph": "s", "cat": "flow", "name": "rpc",
+                                 "id": fid, "pid": pid_of(src),
+                                 "tid": tids[track_name(src)], "ts": us(src.t)})
+                    rows.append({"ph": "f", "bp": "e", "cat": "flow",
+                                 "name": "rpc", "id": fid, "pid": pid,
+                                 "tid": tid, "ts": us(e.t)})
         elif e.kind == "dispatch" and isinstance(e.payload, dict) and isinstance(
             e.payload.get("measured_s"), (int, float)
         ):
@@ -172,10 +239,10 @@ def to_chrome_trace(
                 n_flows += 1
                 fid = str(n_flows)
                 rows.append({"ph": "s", "cat": "flow", "name": "dispatch",
-                             "id": fid, "pid": PID, "tid": tids[track_name(src)],
-                             "ts": us(src.t)})
+                             "id": fid, "pid": pid_of(src),
+                             "tid": tids[track_name(src)], "ts": us(src.t)})
                 rows.append({"ph": "f", "bp": "e", "cat": "flow", "name": "dispatch",
-                             "id": fid, "pid": PID, "tid": tid,
+                             "id": fid, "pid": pid, "tid": tid,
                              "ts": us(start_of(e))})
         elif e.kind == "device" and isinstance(e.payload, dict) and isinstance(
             e.payload.get("dur_s"), (int, float)

@@ -47,6 +47,10 @@ def run_metadata(extra: Optional[dict[str, Any]] = None) -> dict[str, Any]:
         "created_unix": time.time(),
         "argv": list(sys.argv),
         "python": sys.version.split()[0],
+        # paired monotonic/wall samples taken at the same instant: the clock
+        # anchor stitch uses to map this process's event timestamps
+        # (monotonic, arbitrary epoch) onto a shared wall-clock timeline
+        "clock": {"monotonic": time.monotonic(), "unix": time.time()},
     }
     if extra:
         meta.update(extra)

@@ -182,6 +182,21 @@ class StreamingSession:
             json.dumps(self._manifest, indent=1, default=repr),
         )
 
+    def set_meta(self, key: str, value: Any) -> None:
+        """Set one manifest metadata key and rewrite the manifest now.
+
+        For run-level facts learned after the session was opened — e.g. the
+        router front door records each replica's trace directory under
+        ``replica_sessions`` as replicas come up, so ``repro.trace stitch``
+        can discover the fleet's sessions from the frontdoor manifest alone.
+        ``load_stream`` surfaces every such key in ``Session.meta``.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            self._manifest[key] = value
+            self._write_manifest()
+
     def _close_segment_locked(self) -> None:
         """Flush + fsync + rename the open segment; record it in the manifest."""
         f = self._seg_file

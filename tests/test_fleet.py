@@ -785,3 +785,63 @@ def test_healthz_and_metrics_share_one_counter_source(auth_server):
         text = r.read().decode()
     assert "repro_fleet_pushes_total 1" in text
     assert "repro_fleet_snapshots 1" in text
+
+
+# ---------------------------------------------------------------------------
+# Audit log: every successful push/gc leaves a record
+# ---------------------------------------------------------------------------
+
+
+def test_audit_records_push_and_gc(fleet_server):
+    from repro.fleet.service import read_audit
+
+    client = FleetClient(fleet_server.url)
+    client.push(_store([0.001, 0.002]), "sha1", "chipA")
+    client.gc(keep_per_chip=0)
+    recs = read_audit(str(fleet_server.fleet.root))
+    assert [r["verb"] for r in recs] == ["push", "gc"]
+    push_rec, gc_rec = recs
+    assert push_rec["git_sha"] == "sha1" and push_rec["chip"] == "chipA"
+    assert push_rec["entries"] == 1 and push_rec["merged_samples"] == 2
+    assert push_rec["addr"] == "127.0.0.1"
+    assert "token_sha" not in push_rec  # tokenless daemon: no digest
+    assert [b["git_sha"] for b in gc_rec["removed"]] == ["sha1"]
+    # reads never touch the audit log, and rejected pushes leave no record
+    client.pull("sha1", "chipA")
+    with pytest.raises(FleetError, match="400"):
+        client.push(_store([0.001]), "", "chipA")
+    assert len(read_audit(str(fleet_server.fleet.root))) == 2
+
+
+def test_audit_token_digest_not_secret(auth_server):
+    import hashlib
+
+    from repro.fleet.service import read_audit
+
+    FleetClient(auth_server.url, token="s3cret").push(
+        _store([0.001]), "sha1", "chipA")
+    # a rejected anonymous push must not be audited
+    with pytest.raises(FleetError, match="401"):
+        FleetClient(auth_server.url).push(_store([0.001]), "sha2", "chipA")
+    (rec,) = read_audit(str(auth_server.fleet.root))
+    assert rec["token_sha"] == hashlib.sha256(b"s3cret").hexdigest()[:12]
+    raw = open(auth_server.audit_path).read()
+    assert "s3cret" not in raw  # the secret itself never lands on disk
+
+
+def test_audit_cli_tails_and_handles_missing(fleet_server, tmp_path, capsys):
+    root = str(fleet_server.fleet.root)
+    # empty store: friendly message, exit 0
+    assert fleet_main(["audit", "--root", root]) == 0
+    assert "(no audit records)" in capsys.readouterr().out
+    client = FleetClient(fleet_server.url)
+    for i in range(3):
+        client.push(_store([0.001]), f"sha{i}", "chipA")
+    assert fleet_main(["audit", "--root", root, "-n", "2", "--json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert [r["git_sha"] for r in doc["records"]] == ["sha1", "sha2"]
+    # human-readable table renders every verb
+    client.gc(keep_per_chip=1)
+    assert fleet_main(["audit", "--root", root]) == 0
+    out = capsys.readouterr().out
+    assert "push" in out and "gc" in out and "sha2" in out

@@ -229,11 +229,14 @@ def test_replica_server_roundtrip_and_health():
             assert b"repro_requests_total" in resp.read()
     finally:
         srv.stop()
-    # the engine's request span nests under the replica's serve_run root
+    # the engine's request span nests under the handler's rpc span, which
+    # nests under the replica's serve_run root
     spawns = {e.span: (e.name, e.parent) for e in col.events() if e.kind == "spawn"}
     req_spans = [s for s, (n, _p) in spawns.items() if n == "request"]
     assert req_spans and all(
-        spawns[spawns[s][1]][0] == "serve_run" for s in req_spans)
+        spawns[spawns[s][1]][0] == "rpc" for s in req_spans)
+    assert all(
+        spawns[spawns[spawns[s][1]][1]][0] == "serve_run" for s in req_spans)
 
 
 def test_synthetic_engine_concurrent_submit_exactly_once():
