@@ -1,6 +1,11 @@
 """Kernel micro-benchmarks: wall-time of the production jnp paths on CPU plus
 analytic TPU-roofline projections for the Pallas kernels (this container has
 no TPU; the projection prices each kernel's FLOPs/bytes against v5e terms).
+
+Each row stamps the active tuned config of the impl it measures
+(``repro.tune`` winners installed via ``kernels.ops``; "" = shipped
+defaults), so bench artifacts record *which* configuration produced each
+number — comparable across runs that tuned differently.
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.hw.specs import TPU_V5E
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 KEY = jax.random.PRNGKey(0)
 
@@ -36,11 +41,14 @@ def run(fast: bool = False) -> dict:
     q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.float32)
     k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
     v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
-    fa = jax.jit(lambda q, k, v: ref.flash_attention_chunked(q, k, v, causal=True))
+    fa_bk = int(ops.tuned_overrides("flash_attention", "chunked").get("block_k", 512))
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_chunked(q, k, v, causal=True,
+                                                            block_k=fa_bk))
     ms = _time(fa, q, k, v, reps=5 if fast else 20)
     flops = 4 * B * Hq * D * S * (S + 1) / 2
     rows.append({
         "kernel": "flash_attention", "shape": f"B{B} S{S} H{Hq}/{Hkv} D{D}",
+        "config": ops.active_config("flash_attention", "chunked"),
         "cpu_ms": round(ms, 2), "flops": flops,
         "tpu_compute_us": round(flops / chip.peak_flops_bf16 * 1e6, 1),
     })
@@ -51,6 +59,7 @@ def run(fast: bool = False) -> dict:
     flops2 = 4 * B * Hq * D * (S * 256 - 256 * 255 / 2)
     rows.append({
         "kernel": "local_window_attention", "shape": f"S{S} w256",
+        "config": ops.active_config("local_window_attention", "chunked"),
         "cpu_ms": round(ms2, 2), "flops": flops2,
         "tpu_compute_us": round(flops2 / chip.peak_flops_bf16 * 1e6, 1),
     })
@@ -64,6 +73,7 @@ def run(fast: bool = False) -> dict:
     flops3 = 2 * E * C * Dm * F
     rows.append({
         "kernel": "moe_gmm", "shape": f"E{E} C{C} D{Dm} F{F}",
+        "config": ops.active_config("moe_gmm", "ref"),
         "cpu_ms": round(ms3, 2), "flops": flops3,
         "tpu_compute_us": round(flops3 / chip.peak_flops_bf16 * 1e6, 1),
     })
@@ -76,12 +86,13 @@ def run(fast: bool = False) -> dict:
     w6 = jnp.exp(-jnp.exp(jax.random.normal(ks[0], (B2, T, H, K)) * 0.3))
     u = jax.random.normal(ks[1], (H, K)) * 0.3
     s0 = jnp.zeros((B2, H, K, K))
-    rw = jax.jit(lambda *a: ref.rwkv6_scan_chunked(*a, chunk=32))
+    L = ops._scan_chunk("rwkv6_scan", "chunked", 32, T)
+    rw = jax.jit(lambda *a: ref.rwkv6_scan_chunked(*a, chunk=L))
     ms4 = _time(rw, r, kk, vv, w6, u, s0, reps=3 if fast else 10)
-    L = 32
     flops4 = B2 * H * T * (2 * L * K + 2 * L * K + 2 * K * K)  # att + intra + inter
     rows.append({
         "kernel": "rwkv6_scan", "shape": f"T{T} H{H} K{K} L{L}",
+        "config": ops.active_config("rwkv6_scan", "chunked"),
         "cpu_ms": round(ms4, 2), "flops": flops4,
         "tpu_compute_us": round(flops4 / chip.peak_flops_bf16 * 1e6, 1),
     })
@@ -95,19 +106,23 @@ def run(fast: bool = False) -> dict:
     Cm = jax.random.normal(ks[1], (B2, T, N))
     Dp = jnp.ones((DI,))
     h0 = jnp.zeros((B2, DI, N))
-    mb = jax.jit(lambda *a: ref.mamba_scan_chunked(*a, chunk=64))
+    mchunk = ops._scan_chunk("mamba_scan", "chunked", 64, T)
+    mb = jax.jit(lambda *a: ref.mamba_scan_chunked(*a, chunk=mchunk))
     ms5 = _time(mb, x2, dt, A, Bm, Cm, Dp, h0, reps=3 if fast else 10)
     bytes5 = B2 * T * (DI * 2 + N * 2) * 4 + B2 * T * DI * N * 4
     rows.append({
         "kernel": "mamba_scan", "shape": f"T{T} DI{DI} N{N}",
+        "config": ops.active_config("mamba_scan", "chunked"),
         "cpu_ms": round(ms5, 2), "flops": B2 * T * DI * N * 10,
         "tpu_memory_us": round(bytes5 / chip.hbm_bw * 1e6, 1),
     })
 
-    print(f"{'kernel':<24} {'shape':<22} {'cpu_ms':>8} {'tpu_proj_us':>11}")
+    print(f"{'kernel':<24} {'shape':<22} {'config':<14} {'cpu_ms':>8} {'tpu_proj_us':>11}")
     for row in rows:
         proj = row.get("tpu_compute_us", row.get("tpu_memory_us", 0))
-        print(f"{row['kernel']:<24} {row['shape']:<22} {row['cpu_ms']:>8.2f} {proj:>11.1f}")
+        print(f"{row['kernel']:<24} {row['shape']:<22} "
+              f"{row.get('config') or '(defaults)':<14} "
+              f"{row['cpu_ms']:>8.2f} {proj:>11.1f}")
     return {"rows": rows}
 
 

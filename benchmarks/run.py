@@ -9,6 +9,7 @@ Sections:
   4. Kernels  — hot-spot micro-benches + TPU roofline projections
   5. Roofline — 40-cell (arch × shape) table from dry-run records, if present
   6. Dispatch — static vs profile-guided backend placement (repro.dispatch)
+  7. Tune     — measured design-space sweep, tuned configs vs defaults
 """
 from __future__ import annotations
 
@@ -65,6 +66,11 @@ def main() -> None:
     from benchmarks import dispatch_bench
 
     results["dispatch"] = dispatch_bench.run(fast=args.fast)
+
+    print("\n########## 7. Tune: design-space sweep, tuned vs default ##########")
+    from benchmarks import tune_bench
+
+    results["tune"] = tune_bench.run(fast=args.fast)
 
     with open(os.path.join(OUT_DIR, "out_all.json"), "w") as f:
         json.dump(results, f, indent=1, default=str)

@@ -1,0 +1,66 @@
+"""Autotune benchmark: measured design-space sweep, tuned vs default.
+
+Runs the real-mode ``repro.tune`` sweep over a fresh ProfileStore (CPU:
+the chunked spaces; the Pallas spaces need a TPU and are excluded by the
+explorer itself) and reports, per kernel, the shipped default's measured
+time against the sweep winner.
+
+Speedup >= 1.0 holds by construction — the default point is always
+enumerated, never pruned, and competes in the same argmin — so a row
+below 1.0 means the sweep machinery itself broke, which is exactly what
+the bench-smoke gate checks.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core.events import EventLog
+from repro.dispatch.profiles import ProfileStore
+from repro.tune import Explorer, SweepSettings
+
+FAST_OPS = ["rwkv6_scan", "mamba_scan"]
+
+
+def run(fast: bool = False) -> dict:
+    store = ProfileStore()
+    log = EventLog()
+    settings = SweepSettings(mode="real", warmup=1, repeats=2 if fast else 3)
+    explorer = Explorer(store, log=log, settings=settings)
+    summary = explorer.sweep(FAST_OPS if fast else None)
+
+    rows = []
+    for key in sorted(summary["winners"]):
+        win = summary["winners"][key]
+        rows.append({
+            "op": win["op"],
+            "backend": win["backend"],
+            "config": win["config"],
+            "default_ms": round(win["default_s"] * 1e3, 4),
+            "best_ms": round(win["best_s"] * 1e3, 4),
+            "speedup": round(win["speedup"], 3),
+        })
+
+    print(f"{'op':<20} {'backend':<10} {'winner':<14} {'default_ms':>11} "
+          f"{'best_ms':>9} {'speedup':>8}")
+    for row in rows:
+        print(f"{row['op']:<20} {row['backend']:<10} "
+              f"{row['config'] or '(defaults)':<14} {row['default_ms']:>11.4f} "
+              f"{row['best_ms']:>9.4f} {row['speedup']:>7.2f}x")
+
+    return {
+        "mode": settings.mode,
+        "points_total": summary["points_total"],
+        "pruned": summary["pruned"],
+        "sweep_points": summary["sweep_points"],
+        "rows": rows,
+    }
+
+
+def main() -> None:
+    rec = run()
+    with open("benchmarks/out_tune.json", "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

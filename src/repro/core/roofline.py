@@ -153,6 +153,52 @@ def analyze_compiled(lowered, compiled, mesh, chip: Optional[ChipSpec] = None) -
 
 
 # ---------------------------------------------------------------------------
+# VMEM footprint (design-space feasibility for repro.tune)
+# ---------------------------------------------------------------------------
+
+# Mosaic double-buffers the HBM→VMEM pipeline: while one input tile is being
+# consumed the next is in flight, so a tile's VMEM cost is ~2x its size.
+PIPELINE_BUFFERS = 2
+# Fraction of VMEM a single kernel may claim for its tiles + scratch; the
+# rest is headroom for the compiler's own temporaries and constants.
+VMEM_BUDGET_FRACTION = 0.8
+
+
+def vmem_footprint_bytes(
+    tiles: Any, scratch: Any = (), *, buffers: int = PIPELINE_BUFFERS
+) -> int:
+    """VMEM bytes a kernel config point needs resident at once.
+
+    ``tiles``/``scratch`` are iterables of ``(shape, dtype_bytes)``; input and
+    output tiles are multiplied by ``buffers`` (pipeline double-buffering),
+    scratch is single-buffered (it persists across grid steps).  This is the
+    feasibility half of the roofline model: a config whose tiles don't fit
+    never reaches the timing sweep (see :mod:`repro.tune.space`).
+    """
+    def _bytes(rows: Any) -> int:
+        total = 0
+        for shape, dtype_bytes in rows:
+            n = 1
+            for d in shape:
+                n *= int(d)
+            total += n * int(dtype_bytes)
+        return total
+
+    return buffers * _bytes(tiles) + _bytes(scratch)
+
+
+def fits_vmem(
+    footprint_bytes: float,
+    chip: Optional[ChipSpec] = None,
+    *,
+    fraction: float = VMEM_BUDGET_FRACTION,
+) -> bool:
+    """Whether a config point's working set fits the chip's VMEM budget."""
+    chip = chip or default_chip()
+    return footprint_bytes <= chip.vmem_bytes * fraction
+
+
+# ---------------------------------------------------------------------------
 # MODEL_FLOPS (the "useful work" yardstick)
 # ---------------------------------------------------------------------------
 

@@ -72,11 +72,14 @@ class DispatchDecision:
     source: str  # static | roofline | measured | explore
     policy: str
     measured_s: Optional[float] = None  # wall-time of the executed call
+    config: str = ""  # active config point ("" = backend defaults)
 
     def payload(self) -> dict[str, Any]:
         d = dataclasses.asdict(self)
         if d["measured_s"] is None:  # unexecuted decision (partition/choose)
             del d["measured_s"]
+        if not d["config"]:  # default point: keep the legacy payload shape
+            del d["config"]
         return d
 
 
@@ -117,6 +120,18 @@ class Dispatcher:
     def backends(self) -> list[str]:
         return self.registry.names()
 
+    def active_configs(self) -> dict[str, str]:
+        """Per-backend active tuned-config tags for the ``configs=`` params.
+
+        When ``repro.tune`` winners are installed in ``kernels.ops``, each
+        backend's compiled variants execute under those overrides — its
+        samples must land in the matching config-point bucket, not the
+        default one.  All-empty (no tuning) reproduces legacy keys.
+        """
+        from repro.kernels import ops
+
+        return {t.name: ops.config_tag(t.impl) for t in self.registry.targets()}
+
     # -- decision ------------------------------------------------------------
 
     def choose(
@@ -124,42 +139,60 @@ class Dispatcher:
         op: str,
         sig: str,
         estimates: Mapping[str, float],
+        configs: Optional[Mapping[str, str]] = None,
     ) -> DispatchDecision:
         """Pick a backend given per-backend a-priori estimates (seconds).
 
         ``estimates`` keys restrict the candidate set (callers pass only the
-        variants they actually compiled).
+        variants they actually compiled).  ``configs`` maps a backend to the
+        config point its variant executes under (``kernels.ops.config_tag``
+        when tuned overrides are installed); warmth, lookup, and recording
+        then use the full ``(op, backend, sig, config)`` key, so tuned and
+        default samples never pollute each other's buckets and the argmin
+        runs over *config points*, not just backends.
         """
         candidates = [b for b in estimates if b in self.registry]
         if not candidates:
             raise ValueError(f"no registered candidates among {sorted(estimates)}")
+        cfg_of = (configs or {}).get
         policy = self.cfg.policy
         if policy == "static":
             if self.cfg.static_backend in candidates:
                 backend, source = self.cfg.static_backend, "static"
             else:  # pinned backend unavailable here (e.g. pallas off-TPU)
                 backend, source = candidates[0], "static-fallback"
-            decision = DispatchDecision(op, backend, sig, estimates[backend], source, policy)
+            decision = DispatchDecision(op, backend, sig, estimates[backend],
+                                        source, policy, config=cfg_of(backend, ""))
         elif policy == "roofline":
             backend = min(candidates, key=lambda b: estimates[b])
-            decision = DispatchDecision(op, backend, sig, estimates[backend], "roofline", policy)
+            decision = DispatchDecision(op, backend, sig, estimates[backend],
+                                        "roofline", policy, config=cfg_of(backend, ""))
         else:  # profiled
-            cold = [b for b in candidates if not self.store.warm(op, b, sig)]
+            cold = [
+                b for b in candidates
+                if not self.store.warm(op, b, sig, cfg_of(b, ""))
+            ]
             if cold:
                 # explore the least-sampled cold candidate (roofline order
                 # breaks ties so the best a-priori guess is measured first)
                 backend = min(
-                    cold, key=lambda b: (self.store.samples(op, b, sig), estimates[b])
+                    cold,
+                    key=lambda b: (
+                        self.store.samples(op, b, sig, cfg_of(b, "")), estimates[b]
+                    ),
                 )
-                decision = DispatchDecision(op, backend, sig, estimates[backend], "explore", policy)
+                decision = DispatchDecision(op, backend, sig, estimates[backend],
+                                            "explore", policy, config=cfg_of(backend, ""))
             else:
                 costs = {
-                    b: self.store.combined_cost(op, b, sig, estimates[b])
+                    b: self.store.combined_cost(op, b, sig, estimates[b],
+                                                cfg_of(b, ""))
                     for b in candidates
                 }
                 backend = min(candidates, key=lambda b: costs[b][0])
                 decision = DispatchDecision(
-                    op, backend, sig, costs[backend][0], costs[backend][1], policy
+                    op, backend, sig, costs[backend][0], costs[backend][1],
+                    policy, config=cfg_of(backend, ""),
                 )
         self.decisions.append(decision)
         return decision
@@ -173,12 +206,15 @@ class Dispatcher:
         *args: Any,
         estimates: Optional[Mapping[str, float]] = None,
         sig: Optional[str] = None,
+        configs: Optional[Mapping[str, str]] = None,
         **kwargs: Any,
     ) -> Any:
         """Route one call: choose a variant, run it, profile it, log it.
 
         ``sig`` lets hot callers supply a cheap profile key (e.g. the token
         array's shape) instead of walking a large params/state pytree.
+        ``configs`` (per-backend active config point) flows through to
+        :meth:`choose` and keys the recorded sample.
         """
         sig = sig if sig is not None else signature(*args)
         if estimates is None:
@@ -188,7 +224,10 @@ class Dispatcher:
                 for b in variants
                 if b in self.registry
             }
-        decision = self.choose(op, sig, {b: estimates[b] for b in variants if b in estimates})
+        decision = self.choose(
+            op, sig, {b: estimates[b] for b in variants if b in estimates},
+            configs=configs,
+        )
         idx = len(self.decisions) - 1  # choose() appended; backfill measurement
         fn = variants[decision.backend]
         # span id allocated BEFORE execution so an active device profiler can
@@ -200,7 +239,7 @@ class Dispatcher:
             out = fn(*args, **kwargs)
             jax.block_until_ready(out)
         dt = time.perf_counter() - t0
-        self.store.record(op, decision.backend, sig, dt)
+        self.store.record(op, decision.backend, sig, dt, config=decision.config)
         decision = dataclasses.replace(decision, measured_s=dt)
         self.decisions[idx] = decision
         if self.cfg.record_events:

@@ -49,8 +49,78 @@ def signature(*args: Any) -> str:
     return sig
 
 
-def profile_key(op: str, backend: str, sig: str) -> str:
-    return f"{op}|{backend}|{sig}"
+def encode_config(params: Any) -> str:
+    """Canonical string form of a kernel config point: ``"k=v,k2=v2"``.
+
+    Sorted by key so two dicts with the same content encode identically —
+    the encoding IS the profile-bucket identity.  Empty dict encodes to
+    ``""`` (the default/legacy point).
+    """
+    return ",".join(f"{k}={params[k]}" for k in sorted(params))
+
+
+def decode_config(config: str) -> dict[str, Any]:
+    """Inverse of :func:`encode_config`; values parse as int, float, or str."""
+    out: dict[str, Any] = {}
+    if not config:
+        return out
+    for part in config.split(","):
+        k, _, v = part.partition("=")
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def _esc(field: str) -> str:
+    """Escape the key separator (and the escape char itself) inside a field.
+
+    A crafted ``sig`` like ``"x|pallas|y"`` must not alias a different
+    bucket's key — without escaping, ``profile_key("op", "ref", "x|pallas|y")``
+    and ``profile_key("op|ref|x", "pallas", "y")`` collide silently.  Real
+    signatures (``float32[1,16]``-style) contain neither ``%`` nor ``|``, so
+    keys written by previous versions round-trip unchanged.
+    """
+    return field.replace("%", "%25").replace("|", "%7C")
+
+
+def _unesc(field: str) -> str:
+    return field.replace("%7C", "|").replace("%25", "%")
+
+
+def profile_key(op: str, backend: str, sig: str, config: str = "") -> str:
+    """Key of one profile bucket: a full *config point*.
+
+    ``config`` is the canonical encoding of the kernel configuration the
+    samples were measured under (block/tile sizes, batch/padding choices —
+    see :mod:`repro.tune.space`); the empty string means "backend defaults"
+    and yields the legacy three-field key, so existing fleet buckets and
+    session snapshots keep their key strings byte-for-byte.
+    """
+    parts = [_esc(op), _esc(backend), _esc(sig)]
+    if config:
+        parts.append(_esc(config))
+    return "|".join(parts)
+
+
+def parse_profile_key(key: str) -> tuple[str, str, str, str]:
+    """Inverse of :func:`profile_key`: ``(op, backend, sig, config)``.
+
+    Legacy three-field keys parse with ``config == ""``.  Raises ValueError
+    on keys with the wrong field count rather than guessing.
+    """
+    parts = key.split("|")
+    if len(parts) == 3:
+        parts.append("")
+    if len(parts) != 4:
+        raise ValueError(f"malformed profile key {key!r}: "
+                         f"expected 3 or 4 |-separated fields, got {len(parts)}")
+    op, backend, sig, config = (_unesc(p) for p in parts)
+    return op, backend, sig, config
 
 
 def _combine_stamp(a: str, b: str) -> str:
@@ -157,14 +227,16 @@ class ProfileStore:
             e.chip = _combine_stamp(e.chip, self._stamp_chip)
         return e
 
-    def record(self, op: str, backend: str, sig: str, seconds: float) -> None:
+    def record(self, op: str, backend: str, sig: str, seconds: float,
+               config: str = "") -> None:
         with self._lock:
-            self._entry_for_write(profile_key(op, backend, sig)).add(seconds)
+            self._entry_for_write(profile_key(op, backend, sig, config)).add(seconds)
 
-    def observe_timing(self, op: str, backend: str, sig: str, stats: TimingStats) -> None:
+    def observe_timing(self, op: str, backend: str, sig: str, stats: TimingStats,
+                       config: str = "") -> None:
         """Fold a hyperfine benchmark result in as ``stats.runs`` samples."""
         with self._lock:
-            e = self._entry_for_write(profile_key(op, backend, sig))
+            e = self._entry_for_write(profile_key(op, backend, sig, config))
             mean_s = stats.mean_ms / 1e3
             for _ in range(max(stats.runs, 1)):
                 e.add(mean_s)
@@ -177,23 +249,26 @@ class ProfileStore:
             p = ev.payload
             if not isinstance(p, dict) or not isinstance(p.get("measured_s"), (int, float)):
                 continue
-            self.record(p["op"], p["backend"], p.get("sig", "<scalar>"), p["measured_s"])
+            self.record(p["op"], p["backend"], p.get("sig", "<scalar>"),
+                        p["measured_s"], config=p.get("config", ""))
             n += 1
         return n
 
     # -- readers -------------------------------------------------------------
 
-    def entry(self, op: str, backend: str, sig: str) -> Optional[ProfileEntry]:
-        return self._entries.get(profile_key(op, backend, sig))
+    def entry(self, op: str, backend: str, sig: str,
+              config: str = "") -> Optional[ProfileEntry]:
+        return self._entries.get(profile_key(op, backend, sig, config))
 
-    def samples(self, op: str, backend: str, sig: str) -> int:
-        e = self.entry(op, backend, sig)
+    def samples(self, op: str, backend: str, sig: str, config: str = "") -> int:
+        e = self.entry(op, backend, sig, config)
         return e.count if e else 0
 
-    def warm(self, op: str, backend: str, sig: str) -> bool:
-        return self.samples(op, backend, sig) >= self.min_samples
+    def warm(self, op: str, backend: str, sig: str, config: str = "") -> bool:
+        return self.samples(op, backend, sig, config) >= self.min_samples
 
-    def lookup(self, op: str, backend: str, sig: str) -> Optional[float]:
+    def lookup(self, op: str, backend: str, sig: str,
+               config: str = "") -> Optional[float]:
         """Measured seconds, or None if the key is not warm yet.
 
         Uses the *minimum* observed wall-time (hyperfine's robust statistic):
@@ -201,17 +276,54 @@ class ProfileStore:
         polluted by one cold call would mis-rank backends for the rest of the
         run.  With ``min_samples >= 2`` the minimum is a warm execution.
         """
-        e = self.entry(op, backend, sig)
+        e = self.entry(op, backend, sig, config)
         if e is None or e.count < self.min_samples:
             return None
         return e.min_s
 
-    def combined_cost(self, op: str, backend: str, sig: str, estimate_s: float) -> tuple[float, str]:
+    def combined_cost(self, op: str, backend: str, sig: str, estimate_s: float,
+                      config: str = "") -> tuple[float, str]:
         """Measured-beats-estimated: (seconds, source)."""
-        measured = self.lookup(op, backend, sig)
+        measured = self.lookup(op, backend, sig, config)
         if measured is not None:
             return measured, "measured"
         return estimate_s, "roofline"
+
+    def config_points(self, op: str, backend: str, sig: str) -> dict[str, ProfileEntry]:
+        """All measured config points of one (op, backend, sig), keyed by the
+        canonical config encoding (``""`` = backend defaults / legacy keys).
+
+        This is the read side of the design-space sweep: the tuner records
+        each point as an ordinary sample, and consumers (dispatcher,
+        ``repro.tune show``, the drivers' ``--tune cached``) argmin over what
+        came back — from this run, a ``--profile-in`` file, or a fleet pull.
+        """
+        out: dict[str, ProfileEntry] = {}
+        with self._lock:
+            for key, e in self._entries.items():
+                try:
+                    k_op, k_backend, k_sig, k_config = parse_profile_key(key)
+                except ValueError:
+                    continue
+                if k_op == op and k_backend == backend and k_sig == sig:
+                    out[k_config] = e
+        return out
+
+    def best_config(self, op: str, backend: str,
+                    sig: str) -> Optional[tuple[str, float]]:
+        """Argmin-cost *warm* config point: ``(config, min_s)`` or None.
+
+        The default point (``config == ""``) competes on equal terms, so a
+        tuned config is only ever preferred when its measured minimum beats
+        the hand-picked default's.
+        """
+        best: Optional[tuple[str, float]] = None
+        for config, e in self.config_points(op, backend, sig).items():
+            if e.count < self.min_samples:
+                continue
+            if best is None or e.min_s < best[1]:
+                best = (config, e.min_s)
+        return best
 
     def merge(self, other: "ProfileStore") -> int:
         """Fold another store's samples in (warm-start across runs).

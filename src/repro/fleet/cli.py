@@ -138,9 +138,11 @@ def push_source(source: str, fleet: str, git_sha: Optional[str] = None,
 
 def cmd_serve(args: argparse.Namespace) -> int:
     server = make_server(args.root, host=args.host, port=args.port,
-                         quiet=not args.verbose, token=args.token)
+                         quiet=not args.verbose, token=args.token,
+                         quota_rps=args.quota_rps, quota_burst=args.quota_burst)
     print(json.dumps({"fleet": server.url, "root": os.path.abspath(args.root),
-                      "pid": os.getpid(), "auth": args.token is not None}),
+                      "pid": os.getpid(), "auth": args.token is not None,
+                      "quota_rps": args.quota_rps}),
           flush=True)
     if args.ready_file:
         from repro.utils.ready import write_ready_file
@@ -265,6 +267,12 @@ def main(argv: Optional[list[str]] = None) -> int:
     p.add_argument("--token", default=None, metavar="TOKEN",
                    help="require 'Authorization: Bearer TOKEN' on push/gc "
                         "(pull/ls stay open); 401s are counted in /healthz stats")
+    p.add_argument("--quota-rps", type=float, default=None, metavar="R",
+                   help="per-source rate quota on push/gc (token bucket, R "
+                        "req/s per client address); over-quota gets 429, "
+                        "counted as 'throttled', audited per episode")
+    p.add_argument("--quota-burst", type=float, default=None, metavar="B",
+                   help="quota bucket capacity (default max(1, R))")
     p.add_argument("--verbose", action="store_true", help="log each request to stderr")
     p.set_defaults(fn=cmd_serve)
 

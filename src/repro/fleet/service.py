@@ -20,6 +20,13 @@ verbs) then require ``Authorization: Bearer T``; pull/ls/healthz stay open
 the Welford state.  Rejections are 401s, counted in the daemon's stats
 (``auth_failures`` in ``/healthz``).
 
+``--quota-rps R`` adds per-source rate quotas on the same mutating verbs: a
+token bucket per client address (refill R req/s, capacity ``--quota-burst``)
+so one chatty replica can't starve the rest of the fleet's writers.  Over-
+quota requests get 429, counted as ``throttled``; each throttle *episode*
+(the transition into denial, not every denied request) lands in
+``AUDIT.jsonl``.
+
 ``/healthz`` and ``/metrics`` read the **same**
 :class:`~repro.metrics.registry.MetricsRegistry` counters — there is one
 counter source, so the two surfaces can never drift apart.
@@ -72,7 +79,59 @@ def read_audit(root: str, n: Optional[int] = None) -> list[dict[str, Any]]:
 
 # Daemon verb counters; /healthz reports them under these short keys, the
 # Prometheus surface as repro_fleet_<key>_total — same Counter objects.
-STAT_KEYS = ("pushes", "pulls", "gcs", "auth_failures")
+STAT_KEYS = ("pushes", "pulls", "gcs", "auth_failures", "throttled")
+
+
+class RateQuota:
+    """Per-source token bucket over the mutating verbs (push/gc).
+
+    One bucket per client address: refill ``rps`` tokens/s up to ``burst``
+    capacity, one token per request.  ``allow`` returns ``(allowed,
+    episode_start)`` — the second flag is True only on the transition into
+    denial, so callers can audit one record per throttle episode instead of
+    one per denied request (a runaway client would otherwise flood the very
+    audit log the quota protects).
+
+    ``clock`` is injectable (tests pass a fake monotonic clock).  The bucket
+    table is LRU-bounded: address churn (NAT pools, short-lived replicas) can't
+    grow it without bound, and an evicted source simply restarts with a full
+    bucket — the quota fails open, never spuriously throttles.
+    """
+
+    def __init__(self, rps: float, burst: Optional[float] = None, *,
+                 clock: Any = time.monotonic, max_sources: int = 1024) -> None:
+        if rps <= 0:
+            raise ValueError(f"quota rps must be positive, got {rps}")
+        self.rps = float(rps)
+        self.burst = float(burst) if burst is not None else max(1.0, self.rps)
+        if self.burst < 1.0:
+            raise ValueError(f"quota burst must be >= 1, got {self.burst}")
+        self.clock = clock
+        self.max_sources = max_sources
+        self._lock = threading.Lock()
+        # source -> (tokens, t_last); insertion order is recency (pop+reinsert)
+        self._buckets: dict[str, tuple[float, float]] = {}
+        self._throttled: set[str] = set()
+
+    def allow(self, source: str) -> tuple[bool, bool]:
+        now = self.clock()
+        with self._lock:
+            tokens, last = self._buckets.pop(source, (self.burst, now))
+            tokens = min(self.burst, tokens + (now - last) * self.rps)
+            allowed = tokens >= 1.0
+            if allowed:
+                tokens -= 1.0
+            self._buckets[source] = (tokens, now)
+            while len(self._buckets) > self.max_sources:
+                evicted = next(iter(self._buckets))
+                del self._buckets[evicted]
+                self._throttled.discard(evicted)
+            if allowed:
+                self._throttled.discard(source)
+                return True, False
+            episode_start = source not in self._throttled
+            self._throttled.add(source)
+            return False, episode_start
 
 
 class FleetServer(ThreadingHTTPServer):
@@ -83,10 +142,12 @@ class FleetServer(ThreadingHTTPServer):
     allow_reuse_address = True
 
     def __init__(self, addr: tuple[str, int], fleet: FleetStore,
-                 quiet: bool = True, token: Optional[str] = None) -> None:
+                 quiet: bool = True, token: Optional[str] = None,
+                 quota: Optional[RateQuota] = None) -> None:
         self.fleet = fleet
         self.quiet = quiet
         self.token = token
+        self.quota = quota
         self.audit_path = os.path.join(fleet.root, AUDIT_NAME)
         self._audit_lock = threading.Lock()
         # single counter source for /healthz AND /metrics: a parallel dict
@@ -198,6 +259,25 @@ class _Handler(BaseHTTPRequestHandler):
                          "(daemon started with --token)")
         return False
 
+    def _within_quota(self, path: str) -> bool:
+        """Per-source token bucket on the mutating verbs (after auth, so
+        unauthenticated floods are 401s, not quota spend).  Denials are 429,
+        counted; each throttle episode gets exactly one audit record."""
+        quota = self.server.quota
+        if quota is None:
+            return True
+        source = self.client_address[0]
+        allowed, episode_start = quota.allow(source)
+        if allowed:
+            return True
+        self.server.count("throttled")
+        if episode_start:
+            self.server.audit("throttle", source, path=path,
+                              rps=quota.rps, burst=quota.burst)
+        self._error(429, f"per-source rate quota exceeded "
+                         f"({quota.rps:g} req/s, burst {quota.burst:g})")
+        return False
+
     # -- routes ---------------------------------------------------------------
 
     def do_GET(self) -> None:  # noqa: N802 (http.server API)
@@ -233,8 +313,11 @@ class _Handler(BaseHTTPRequestHandler):
 
     def do_POST(self) -> None:  # noqa: N802
         url = urllib.parse.urlsplit(self.path)
-        if url.path in ("/v1/push", "/v1/gc") and not self._authorized():
-            return
+        if url.path in ("/v1/push", "/v1/gc"):
+            if not self._authorized():
+                return
+            if not self._within_quota(url.path):
+                return
         body = self._body()
         if body is None:
             return
@@ -278,12 +361,18 @@ class _Handler(BaseHTTPRequestHandler):
 
 
 def make_server(root: str, host: str = "127.0.0.1", port: int = 8377,
-                quiet: bool = True, token: Optional[str] = None) -> FleetServer:
+                quiet: bool = True, token: Optional[str] = None,
+                quota_rps: Optional[float] = None,
+                quota_burst: Optional[float] = None) -> FleetServer:
     """Bind a fleet daemon (``port=0`` picks a free port; see ``.url``).
 
     ``token`` requires ``Authorization: Bearer <token>`` on push/gc.
+    ``quota_rps`` rate-limits push/gc per source address (token bucket of
+    ``quota_burst`` capacity, default max(1, rps)); over-quota gets 429.
     """
     import os
 
     os.makedirs(root, exist_ok=True)  # the daemon's root is explicit intent
-    return FleetServer((host, port), FleetStore(root), quiet=quiet, token=token)
+    quota = RateQuota(quota_rps, quota_burst) if quota_rps is not None else None
+    return FleetServer((host, port), FleetStore(root), quiet=quiet, token=token,
+                       quota=quota)

@@ -11,11 +11,13 @@ the per-kernel allclose sweeps.  ``impl='ref'`` forces the naive oracle.
 from __future__ import annotations
 
 import os
-from typing import Optional
+from contextlib import contextmanager
+from typing import Any, Iterator, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.dispatch.profiles import encode_config
 from repro.kernels import ref as _ref
 from repro.kernels.decode_attention import decode_attention as _decode_pallas
 from repro.kernels.flash_attention import flash_attention as _fa_pallas
@@ -32,6 +34,87 @@ def set_default_impl(impl: str) -> None:
     global _IMPL
     assert impl in ("auto", "pallas", "ref", "chunked")
     _IMPL = impl
+
+
+# ---------------------------------------------------------------------------
+# Tuned kernel configs (repro.tune)
+#
+# ``_TUNED[op][impl]`` is a kwargs dict overriding that entry point's
+# block/tile/chunk knobs.  The table is set by the tuner (sweep winners or a
+# fleet-pulled cache) and takes precedence over hand-picked values — including
+# ones callers pass explicitly, since replacing hand-picked configs with
+# measured ones is the point.  Overrides apply at trace time, so they must be
+# installed before jit compilation (the launch drivers tune before building
+# the engine / train step).
+# ---------------------------------------------------------------------------
+
+_TUNED: dict[str, dict[str, dict[str, Any]]] = {}
+
+
+def set_tuned_configs(table: Mapping[str, Mapping[str, Mapping[str, Any]]]) -> None:
+    """Install tuned config overrides: ``{op: {impl: {param: value}}}``."""
+    global _TUNED
+    _TUNED = {
+        op: {impl: dict(params) for impl, params in impls.items()}
+        for op, impls in table.items()
+    }
+
+
+def clear_tuned_configs() -> None:
+    global _TUNED
+    _TUNED = {}
+
+
+def tuned_overrides(op: str, impl: str) -> dict[str, Any]:
+    return dict(_TUNED.get(op, {}).get(impl, {}))
+
+
+def active_config(op: str, impl: str) -> str:
+    """Canonical ``"k=v,..."`` encoding of the active overrides ("" = default)."""
+    return encode_config(_TUNED.get(op, {}).get(impl, {}))
+
+
+def config_tag(impl: str) -> str:
+    """Cross-op summary of active overrides for one backend tier.
+
+    Dispatch profile keys are per (op, backend); this folds every tuned op's
+    config for ``impl`` into one stable tag (``"op:k=v;op2:k=v"``) so a
+    coarse-grained dispatch target ("decode_step", "train_step") lands its
+    samples in a bucket distinct from the untuned default.
+    """
+    parts = [
+        f"{op}:{encode_config(impls[impl])}"
+        for op, impls in sorted(_TUNED.items())
+        if impls.get(impl)
+    ]
+    return ";".join(parts)
+
+
+@contextmanager
+def tuned_scope(
+    table: Mapping[str, Mapping[str, Mapping[str, Any]]],
+) -> Iterator[None]:
+    """Temporarily install tuned overrides (sweep measurement, tests)."""
+    global _TUNED
+    prev = _TUNED
+    set_tuned_configs(table)
+    try:
+        yield
+    finally:
+        _TUNED = prev
+
+
+def _scan_chunk(op: str, impl: str, chunk: int, T: int) -> int:
+    """Tuned chunk for a scan op, kept only when it divides the seq length.
+
+    The chunked scans require ``T % min(chunk, T) == 0``; a winner swept on
+    one workload shape must not crash another, so an indivisible override
+    falls back to the caller's value.
+    """
+    tuned = _TUNED.get(op, {}).get(impl, {}).get("chunk")
+    if tuned is not None and T % min(int(tuned), T) == 0:
+        return int(tuned)
+    return chunk
 
 
 def _on_tpu() -> bool:
@@ -70,6 +153,7 @@ def attention(
         return _fa_pallas(
             q, k, v, causal=causal, window=window, softcap=softcap,
             q_offset=q_offset, interpret=_interp(),
+            **tuned_overrides("flash_attention", "pallas"),
         )
     if impl == "ref":
         return _ref.mha_ref(
@@ -78,7 +162,8 @@ def attention(
     if local_ok:
         return _ref.local_window_attention(q, k, v, window=window, softcap=softcap)
     return _ref.flash_attention_chunked(
-        q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
+        q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset,
+        **tuned_overrides("flash_attention", "chunked"),
     )
 
 
@@ -98,6 +183,7 @@ def decode_attention(
         return _decode_pallas(
             q, k_cache, v_cache, pos_ids, cur_pos,
             window=window, softcap=softcap, interpret=_interp(),
+            **tuned_overrides("decode_attention", "pallas"),
         )
     return _ref.decode_attention_ref(
         q, k_cache, v_cache, pos_ids, cur_pos, window=window, softcap=softcap
@@ -167,7 +253,9 @@ def decode_attention_seq_sharded(
 def gmm(x: jax.Array, w: jax.Array, *, impl: Optional[str] = None) -> jax.Array:
     impl = _resolve(impl)
     if impl == "pallas":
-        return _gmm_pallas(x, w, interpret=_interp())
+        return _gmm_pallas(
+            x, w, interpret=_interp(), **tuned_overrides("moe_gmm", "pallas")
+        )
     return _ref.gmm_ref(x, w)
 
 
@@ -183,9 +271,10 @@ def moe_ffn(
     """Per-expert gated FFN over capacity buckets: act(x@w1) * (x@w3) @ w2."""
     impl = _resolve(impl)
     if impl == "pallas":
-        h = _gmm_pallas(x, w1, epilogue=act, interpret=_interp())
-        h = h * _gmm_pallas(x, w3, interpret=_interp())
-        return _gmm_pallas(h, w2, interpret=_interp())
+        tuned = tuned_overrides("moe_gmm", "pallas")
+        h = _gmm_pallas(x, w1, epilogue=act, interpret=_interp(), **tuned)
+        h = h * _gmm_pallas(x, w3, interpret=_interp(), **tuned)
+        return _gmm_pallas(h, w2, interpret=_interp(), **tuned)
     return _ref.moe_ffn_ref(x, w1, w3, w2, act=act)
 
 
@@ -202,6 +291,7 @@ def rwkv6_scan(
     impl: Optional[str] = None,
 ) -> tuple[jax.Array, jax.Array]:
     impl = _resolve(impl)
+    chunk = _scan_chunk("rwkv6_scan", impl, chunk, r.shape[1])
     if impl == "pallas":
         return _rwkv6_pallas(r, k, v, w, u, state, chunk=chunk, interpret=_interp())
     if impl == "ref":
@@ -237,6 +327,7 @@ def mamba_scan(
     impl: Optional[str] = None,
 ) -> tuple[jax.Array, jax.Array]:
     impl = _resolve(impl)
+    chunk = _scan_chunk("mamba_scan", impl, chunk, x.shape[1])
     if impl == "pallas":
         return _mamba_pallas(x, dt, A, Bm, C, D, state, chunk=chunk, interpret=_interp())
     if impl == "ref":

@@ -76,6 +76,18 @@ def main() -> None:
     )
     ap.add_argument("--dispatch-backend", default="chunked",
                     help="backend pinned by --dispatch static")
+    ap.add_argument("--tune", choices=("off", "cached", "sweep"), default="off",
+                    help="kernel autotuning (repro.tune): cached applies "
+                         "winners already in the profile store (e.g. fleet-"
+                         "pulled) with zero sweep cost; sweep measures "
+                         "missing design-space points first")
+    ap.add_argument("--tune-ops", default=None, metavar="OP[,OP]",
+                    help="restrict --tune sweep to these ops")
+    ap.add_argument("--tune-mode", choices=("real", "interpret", "synthetic"),
+                    default="interpret",
+                    help="sweep measurement mode (synthetic = model-only, CI)")
+    ap.add_argument("--tune-workers", type=int, default=0, metavar="N",
+                    help="sweep worker processes (0 = in-process)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a repro.trace session snapshot of this run")
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
@@ -123,6 +135,9 @@ def main() -> None:
     if args.fleet and args.dispatch == "off":
         # a fleet-less run would silently neither warm-start nor push
         ap.error("--fleet requires --dispatch (static|roofline|profiled)")
+    if args.tune != "off" and args.dispatch == "off":
+        # tune winners live in the dispatcher's profile store
+        ap.error("--tune requires --dispatch (static|roofline|profiled)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -196,6 +211,20 @@ def main() -> None:
         log = TraceCollector(capacity=args.trace_capacity)
         if dispatcher is not None:
             dispatcher.log = log
+        tune_rec = None
+        if args.tune != "off" and dispatcher is not None:
+            # after the fleet pull (pulled config points make sweep points
+            # warm — a fed fleet means sweep_points == 0) and before the
+            # first step traces the jitted variants (winners must be
+            # installed first); sweep samples land in dispatcher.store, so
+            # the pusher delta-pushes tuned winners like any measurement
+            from repro.tune import driver_tune
+
+            tune_rec = driver_tune(
+                args.tune, dispatcher, log,
+                ops_filter=args.tune_ops.split(",") if args.tune_ops else None,
+                mode=args.tune_mode, workers=args.tune_workers,
+            )
         from repro.metrics import (
             DEFAULT_BUDGET_PCT,
             AdaptiveController,
@@ -289,6 +318,8 @@ def main() -> None:
         if args.profile_in:
             rec["profile_in"] = args.profile_in
             rec["profile_aged_out"] = len(aged)
+    if tune_rec is not None:
+        rec["tune"] = tune_rec
     if controller is not None:
         controller.stop()  # final overhead reading lands in the gauges
         rec["trace_controller"] = controller.snapshot()

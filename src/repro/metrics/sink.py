@@ -21,6 +21,9 @@ Derived series (all prefixed ``repro_``):
 * ``repro_router_requests_total{replica,outcome}`` and
   ``repro_router_route_ms`` from the router front door's terminal ``route``
   outcome events (see :mod:`repro.router.frontdoor`);
+* ``repro_tune_points_total{op,pruned}`` from design-space sweep points and
+  ``repro_tune_best_speedup{op}`` gauges from per-space winner events (see
+  :mod:`repro.tune.explore`);
 * ``repro_stragglers_total``, ``repro_trace_controller_events_total``;
 * ``repro_trace_events_total{kind}`` for the raw stream.
 
@@ -74,6 +77,7 @@ class MetricsSink:
         self._device_hists: dict[tuple, Histogram] = {}
         self._device_counters: dict[str, Counter] = {}
         self._router_counters: dict[tuple, Counter] = {}
+        self._tune_counters: dict[tuple, Counter] = {}
         self._route_hist: Optional[Histogram] = None
         self._hop_hists: dict[str, Histogram] = {}
         self._hop_mismatch: Optional[Counter] = None
@@ -213,6 +217,27 @@ class MetricsSink:
                             "requests whose hop decomposition failed to sum "
                             "to end-to-end latency (within 5%)")
                     self._hop_mismatch.inc()
+        elif e.kind == "tune":
+            p = e.payload if isinstance(e.payload, dict) else {}
+            if p.get("winner"):
+                # best-vs-default per op; >= 1.0 by construction (the default
+                # point competes in the same argmin)
+                speedup = p.get("speedup")
+                if isinstance(speedup, (int, float)):
+                    self.registry.gauge(
+                        "repro_tune_best_speedup",
+                        "tuned best-config speedup over the hand-picked default",
+                        op=str(p.get("op"))).set(float(speedup))
+                return
+            key = (str(p.get("op")), "true" if p.get("pruned") else "false")
+            c = self._tune_counters.get(key)
+            if c is None:
+                c = self.registry.counter(
+                    "repro_tune_points_total",
+                    "design-space points seen by the tuner",
+                    op=key[0], pruned=key[1])
+                self._tune_counters[key] = c
+            c.inc()
         elif e.name == "device_window":
             p = e.payload if isinstance(e.payload, dict) else {}
             if "events" in p:  # window-close marks only (not start/warning)

@@ -90,6 +90,9 @@ class Supervisor:
         # the argmin-cost compiled variant (see repro.dispatch)
         self.dispatcher = dispatcher
         self.step_variants = dict(step_variants) if step_variants else None
+        # per-backend tuned-config tags, resolved lazily at the first
+        # dispatched step (tune winners are installed before run())
+        self._configs: Optional[dict] = None
         # durable trace sink (repro.trace.StreamingSession): rotated at every
         # checkpoint so the on-disk trace is never staler than the on-disk
         # model state — a crash recovers both to the same point
@@ -146,9 +149,12 @@ class Supervisor:
                     if self.dispatcher is not None and self.step_variants:
                         # inside the step's span scope: the dispatch event
                         # lands in the span tree as the step's child
+                        if self._configs is None:
+                            self._configs = self.dispatcher.active_configs()
                         self.state, metrics = self.dispatcher.dispatch(
                             "train_step", self.step_variants, self.state, batch,
                             sig=signature(batch),  # state pytree is fixed-shape
+                            configs=self._configs,
                         )
                     else:
                         self.state, metrics = self.train_step(self.state, batch)

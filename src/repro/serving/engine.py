@@ -112,6 +112,10 @@ class Engine:
             }
             self._canonical = {"serve_prefill": prefill_fn, "serve_decode": decode_fn}
             self._est_cache: dict = {}
+            # per-backend tuned-config tags, resolved at first dispatch (the
+            # drivers install repro.tune winners before the engine runs);
+            # keys every recorded sample to the config actually executing
+            self._configs: Optional[dict] = None
             self._prefill = lambda p, t: self._dispatched("serve_prefill", self._prefill_variants, p, t)
             self._decode = lambda p, t, c, ch: self._dispatched(
                 "serve_decode", self._decode_variants, p, t, c, ch
@@ -128,10 +132,13 @@ class Engine:
         than a decode step.
         """
         sig = signature(args[1])  # tokens: distinguishes prefill buckets
+        if self._configs is None:
+            self._configs = self.dispatcher.active_configs()
         if self.dispatcher.cfg.policy == "static":
             # pinned backend: the SDFG pricing would be computed only to be
             # logged — skip the extra trace per prompt-length bucket
-            return self.dispatcher.dispatch(op, variants, *args, sig=sig)
+            return self.dispatcher.dispatch(op, variants, *args, sig=sig,
+                                            configs=self._configs)
         key = (op, sig)
         if key not in self._est_cache:
             canonical = with_impl("chunked", self._canonical[op])
@@ -142,7 +149,8 @@ class Engine:
                 for t in self.dispatcher.registry.targets()
             }
         return self.dispatcher.dispatch(
-            op, variants, *args, estimates=self._est_cache[key], sig=sig
+            op, variants, *args, estimates=self._est_cache[key], sig=sig,
+            configs=self._configs,
         )
 
     # -- client API ----------------------------------------------------------

@@ -1,0 +1,38 @@
+"""repro.tune — fleet-wide kernel autotuning via design-space exploration.
+
+The paper's loop, applied to *configuration* instead of just placement:
+measure the design space (block/tile/chunk sizes per kernel backend), prune
+it with the roofline model, time the survivors in parallel, and publish the
+winners through the fleet so one machine's sweep warm-starts every later run
+on matching hardware.
+
+    space.py     candidate config grids per (op, backend), constraint-aware
+    prune.py     roofline pruning (never cuts the shipped default)
+    explore.py   the parallel sweep + winner application
+    cli.py       ``python -m repro.tune {sweep,show,spaces}``
+
+Everything here is importable without jax; real measurement imports it
+lazily inside the sweep workers.
+"""
+from repro.tune.explore import (
+    Explorer,
+    SweepSettings,
+    apply_winners,
+    driver_tune,
+    winners_from_store,
+)
+from repro.tune.prune import DEFAULT_PRUNE_RATIO, RooflinePruner
+from repro.tune.space import ConfigPoint, KernelSpace, default_spaces
+
+__all__ = [
+    "ConfigPoint",
+    "DEFAULT_PRUNE_RATIO",
+    "Explorer",
+    "KernelSpace",
+    "RooflinePruner",
+    "SweepSettings",
+    "apply_winners",
+    "default_spaces",
+    "driver_tune",
+    "winners_from_store",
+]

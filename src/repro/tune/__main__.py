@@ -1,0 +1,5 @@
+import sys
+
+from repro.tune.cli import main
+
+sys.exit(main())

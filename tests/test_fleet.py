@@ -845,3 +845,105 @@ def test_audit_cli_tails_and_handles_missing(fleet_server, tmp_path, capsys):
     assert fleet_main(["audit", "--root", root]) == 0
     out = capsys.readouterr().out
     assert "push" in out and "gc" in out and "sha2" in out
+
+
+# ---------------------------------------------------------------------------
+# Per-source rate quotas: token bucket on push/gc; 429s counted + audited
+# ---------------------------------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_rate_quota_bucket_spend_and_refill():
+    from repro.fleet.service import RateQuota
+
+    clk = _FakeClock()
+    q = RateQuota(rps=1.0, burst=2, clock=clk)
+    assert q.allow("a") == (True, False)
+    assert q.allow("a") == (True, False)
+    # bucket empty: denied, and the FIRST denial starts the audit episode
+    assert q.allow("a") == (False, True)
+    assert q.allow("a") == (False, False)
+    clk.t += 1.0  # one token refilled at 1 req/s
+    assert q.allow("a") == (True, False)
+    assert q.allow("a")[0] is False
+
+
+def test_rate_quota_per_source_and_lru_fails_open():
+    from repro.fleet.service import RateQuota
+
+    clk = _FakeClock()
+    q = RateQuota(rps=1.0, burst=1, clock=clk, max_sources=2)
+    assert q.allow("a")[0] is True
+    assert q.allow("b")[0] is True  # b's bucket independent of a's spend
+    assert q.allow("a") == (False, True)
+    # touching two new sources evicts 'a' (LRU); it comes back with a full
+    # bucket — eviction fails open, never spuriously throttles
+    q.allow("c")
+    q.allow("d")
+    assert q.allow("a")[0] is True
+
+
+def test_rate_quota_validates_params():
+    from repro.fleet.service import RateQuota
+
+    with pytest.raises(ValueError):
+        RateQuota(0)
+    with pytest.raises(ValueError):
+        RateQuota(-1.0)
+    with pytest.raises(ValueError):
+        RateQuota(1.0, burst=0.5)
+
+
+@pytest.fixture()
+def quota_server(tmp_path):
+    from repro.fleet.service import make_server as mk
+
+    server = mk(str(tmp_path / "fleet_root"), port=0, quota_rps=1.0,
+                quota_burst=2)
+    server.quota.clock = _FakeClock()  # frozen: no refill unless advanced
+    thread = threading.Thread(target=server.serve_forever, daemon=True)
+    thread.start()
+    try:
+        yield server
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+def test_quota_throttles_push_with_429_counted_and_audited(quota_server):
+    from repro.fleet.service import read_audit
+
+    client = FleetClient(quota_server.url)
+    client.push(_store([0.001, 0.002]), "sha1", "chipA")
+    client.push(_store([0.003, 0.004]), "sha1", "chipA")
+    for _ in range(2):
+        with pytest.raises(FleetError, match="429"):
+            client.push(_store([0.005]), "sha1", "chipA")
+    health = client.health()
+    assert health["stats"]["pushes"] == 2
+    assert health["stats"]["throttled"] == 2
+    # reads never spend quota: a fleet-warmed driver must always pull
+    assert client.pull("sha1", "chipA")["match"] == "exact"
+    assert client.ls()
+    # one audit record per throttle EPISODE, not per denied request
+    throttles = [r for r in read_audit(str(quota_server.fleet.root))
+                 if r["verb"] == "throttle"]
+    assert len(throttles) == 1
+    assert throttles[0]["path"] == "/v1/push"
+    assert throttles[0]["rps"] == 1.0
+    # refill ends the episode; the next denial starts (and audits) a new one
+    quota_server.quota.clock.t += 1.0
+    client.push(_store([0.006]), "sha1", "chipA")
+    with pytest.raises(FleetError, match="429"):
+        client.gc(keep_per_chip=1)  # gc shares the same per-source bucket
+    throttles = [r for r in read_audit(str(quota_server.fleet.root))
+                 if r["verb"] == "throttle"]
+    assert len(throttles) == 2
+    assert throttles[1]["path"] == "/v1/gc"

@@ -1,0 +1,396 @@
+"""repro.tune: design-space enumeration, roofline pruning, parallel sweeps,
+config-point profile keys, and the fleet round-trip of tuned winners."""
+import dataclasses
+import json
+
+import pytest
+
+from repro.dispatch.profiles import (
+    ProfileStore,
+    decode_config,
+    encode_config,
+    parse_profile_key,
+    profile_key,
+)
+from repro.hw.specs import TPU_V5E, default_chip
+from repro.tune import (
+    Explorer,
+    RooflinePruner,
+    SweepSettings,
+    apply_winners,
+    default_spaces,
+    winners_from_store,
+)
+
+SCAN_OPS = ["rwkv6_scan", "mamba_scan"]
+
+
+# ---------------------------------------------------------------------------
+# Profile keys: config points + separator escaping (regression)
+# ---------------------------------------------------------------------------
+
+
+def test_profile_key_round_trips_config():
+    key = profile_key("op", "be", "f32[4]", "block_k=128,chunk=32")
+    assert parse_profile_key(key) == ("op", "be", "f32[4]", "block_k=128,chunk=32")
+
+
+def test_legacy_three_field_keys_parse_with_empty_config():
+    assert parse_profile_key("op|be|f32[4]") == ("op", "be", "f32[4]", "")
+    # and an empty config emits the byte-identical legacy key
+    assert profile_key("op", "be", "f32[4]", "") == "op|be|f32[4]"
+
+
+def test_key_separator_cannot_alias_fields():
+    """A sig containing the separator must not collide with a (sig, config)
+    pair — the crafted-aliasing regression the escaping exists for."""
+    crafted = profile_key("op", "be", "sig|x=1")
+    honest = profile_key("op", "be", "sig", "x=1")
+    assert crafted != honest
+    assert parse_profile_key(crafted) == ("op", "be", "sig|x=1", "")
+    assert parse_profile_key(honest) == ("op", "be", "sig", "x=1")
+    # escape metacharacters themselves survive the round trip
+    weird = profile_key("op", "be", "100%|done", "a=%7C")
+    assert parse_profile_key(weird) == ("op", "be", "100%|done", "a=%7C")
+
+
+def test_encode_decode_config_round_trip():
+    params = {"block_k": 128, "ratio": 0.5, "mode": "fast"}
+    config = encode_config(params)
+    assert config == "block_k=128,mode=fast,ratio=0.5"  # sorted, stable
+    assert decode_config(config) == params
+    assert encode_config({}) == ""
+    assert decode_config("") == {}
+
+
+# ---------------------------------------------------------------------------
+# ProfileStore: config points coexist, argmin, JSON round trip
+# ---------------------------------------------------------------------------
+
+
+def _fill(store, op="op", be="be", sig="s"):
+    for x in (3e-3, 3e-3):
+        store.record(op, be, sig, x)  # default point
+    for x in (1e-3, 1e-3):
+        store.record(op, be, sig, x, config="chunk=64")
+    for x in (2e-3, 2e-3):
+        store.record(op, be, sig, x, config="chunk=16")
+
+
+def test_store_config_points_and_best_config():
+    store = ProfileStore(min_samples=2)
+    _fill(store)
+    points = store.config_points("op", "be", "s")
+    assert set(points) == {"", "chunk=64", "chunk=16"}
+    config, best_s = store.best_config("op", "be", "s")
+    assert config == "chunk=64"
+    assert best_s == pytest.approx(1e-3)
+    # the default ("") competes on equal terms: make it fastest and it wins
+    store.record("op", "be", "s", 1e-5)
+    store.record("op", "be", "s", 1e-5)
+    assert store.best_config("op", "be", "s")[0] == ""
+
+
+def test_store_json_round_trip_preserves_config_keys():
+    store = ProfileStore(min_samples=2)
+    _fill(store)
+    back = ProfileStore.from_json(store.to_json())
+    assert set(back.config_points("op", "be", "s")) == {"", "chunk=64", "chunk=16"}
+    assert back.best_config("op", "be", "s")[0] == "chunk=64"
+    # merge keeps config points distinct
+    other = ProfileStore()
+    other.record("op", "be", "s", 5e-4, config="chunk=64")
+    back.merge(other)
+    assert back.entry("op", "be", "s", "chunk=64").count == 3
+
+
+# ---------------------------------------------------------------------------
+# Design spaces: constraint-aware enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_enumeration_respects_alignment():
+    spaces = default_spaces()
+    flash = spaces["flash_attention/pallas"]
+    for p in flash.points():
+        assert p.params["block_q"] % 128 == 0 and p.params["block_k"] % 128 == 0
+    chunked = spaces["flash_attention/chunked"]
+    for p in chunked.points():
+        assert p.params["block_k"] % 8 == 0
+
+
+def test_enumeration_respects_divisibility():
+    for key in ("rwkv6_scan/chunked", "mamba_scan/chunked"):
+        space = default_spaces()[key]
+        T = space.workload["T"]
+        for p in space.points():
+            assert T % min(p.params["chunk"], T) == 0
+    # a workload the grid can't tile drops the non-dividing points; values
+    # past T clamp to full-T (min(chunk, T)) and so stay feasible
+    space = default_spaces()["rwkv6_scan/chunked"]
+    odd = dataclasses.replace(space, workload={**space.workload, "T": 24})
+    chunks = {p.params["chunk"] for p in odd.points()}
+    assert 16 not in chunks  # 24 % 16 != 0
+    assert 8 in chunks  # 24 % 8 == 0
+    assert 64 in chunks and 128 in chunks  # clamp to T=24, which tiles
+
+
+def test_enumeration_respects_vmem_budget():
+    space = default_spaces()["flash_attention/pallas"]
+    full = {p.config for p in space.points(TPU_V5E)}
+    # a chip with almost no VMEM rejects every grid point; the hand-picked
+    # default is still enumerated (known-good escape hatch)
+    tiny = dataclasses.replace(TPU_V5E, vmem_bytes=64 << 10)
+    survivors = space.points(tiny)
+    assert len(survivors) < len(full)
+    assert [p.config for p in survivors] == [space.default_config]
+
+
+def test_points_deterministic_order_and_include_default():
+    for space in default_spaces().values():
+        a = [p.config for p in space.points()]
+        b = [p.config for p in space.points()]
+        assert a == b
+        assert space.default_config in a
+
+
+def test_synthetic_surface_deterministic_and_bounded():
+    space = default_spaces()["mamba_scan/chunked"]
+    for p in space.points():
+        s1, s2 = space.synthetic_s(p.params), space.synthetic_s(p.params)
+        assert s1 == s2
+        roof = space.roofline_s(p.params)
+        assert roof <= s1 <= roof * 1.05
+
+
+# ---------------------------------------------------------------------------
+# Pruner: never cuts the default, never cuts the measured-best
+# ---------------------------------------------------------------------------
+
+
+def test_pruner_never_drops_default_even_at_ratio_one():
+    for space in default_spaces().values():
+        kept, cut = RooflinePruner(ratio=1.0).prune(space, space.points())
+        assert any(p.config == space.default_config for p in kept)
+        # ratio 1.0 is maximally aggressive: only the bound point(s) + default
+        assert len(kept) < len(space.points()) or len(space.points()) <= 2
+
+
+def test_pruner_keeps_synthetic_best_at_default_ratio():
+    """The measured-best on the synthetic surface must survive pruning: the
+    jitter is <=5% while the ratio allows 4x, so a pruned-away winner would
+    mean the model and the surface disagree structurally."""
+    for space in default_spaces().values():
+        points = space.points()
+        best = min(points, key=lambda p: space.synthetic_s(p.params))
+        kept, _ = RooflinePruner().prune(space, points)
+        assert best.config in {p.config for p in kept}, space.key
+
+
+def test_pruner_validates_ratio_and_handles_empty():
+    with pytest.raises(ValueError):
+        RooflinePruner(ratio=0.5)
+    kept, cut = RooflinePruner().prune(
+        default_spaces()["mamba_scan/chunked"], [])
+    assert kept == [] and cut == []
+
+
+# ---------------------------------------------------------------------------
+# Explorer: deterministic sweeps, warm skip, events, winners
+# ---------------------------------------------------------------------------
+
+
+def _sweep(store, workers=0, ops=SCAN_OPS, log=None):
+    from repro.core.events import EventLog
+
+    explorer = Explorer(
+        # `is not None`: an empty EventLog is falsy (len 0) but still the
+        # caller's log
+        store, log=log if log is not None else EventLog(),
+        settings=SweepSettings(mode="synthetic", workers=workers),
+    )
+    return explorer.sweep(ops)
+
+
+def test_synthetic_sweep_deterministic_across_worker_counts():
+    s0, s2 = ProfileStore(), ProfileStore()
+    r0 = _sweep(s0, workers=0)
+    r2 = _sweep(s2, workers=2)
+    assert r0["sweep_points"] == r2["sweep_points"] > 0
+    assert json.loads(s0.to_json()) == json.loads(s2.to_json())
+    assert r0["winners"] == r2["winners"]
+
+
+def test_sweep_skips_warm_points_second_time():
+    store = ProfileStore()
+    r1 = _sweep(store)
+    assert r1["sweep_points"] > 0 and r1["skipped_warm"] == 0
+    r2 = _sweep(store)
+    assert r2["sweep_points"] == 0
+    assert r2["skipped_warm"] == r1["sweep_points"]
+
+
+def test_sweep_emits_tune_events_under_tune_run_span():
+    from repro.core.events import EventLog
+
+    log = EventLog()
+    store = ProfileStore()
+    summary = _sweep(store, log=log)
+    assert summary["pruned"] >= 1
+    tune_events = [e for e in log.events(kind="tune")]
+    pruned = [e for e in tune_events if e.payload.get("pruned") is True]
+    measured = [e for e in tune_events if e.payload.get("pruned") is False]
+    winners = [e for e in tune_events if e.payload.get("winner")]
+    assert len(pruned) == summary["pruned"]
+    assert len(measured) == summary["sweep_points"]
+    assert len(winners) == len(summary["winners"]) == 2
+    roots = [e for e in log.events(name="tune_run")]
+    assert len(roots) == 2  # lifecycle enter/exit bracket
+
+
+def test_winner_speedup_never_below_one():
+    summary = _sweep(ProfileStore())
+    for win in summary["winners"].values():
+        assert win["speedup"] >= 1.0
+        assert win["best_s"] <= win["default_s"]
+
+
+def test_winners_from_store_apply_and_clear():
+    from repro.kernels import ops
+
+    store = ProfileStore()
+    _sweep(store)
+    table, details = winners_from_store(store)
+    assert set(details) == {"rwkv6_scan/chunked", "mamba_scan/chunked"}
+    try:
+        applied = apply_winners(table)
+        assert applied == sum(len(v) for v in table.values())
+        for op, impls in table.items():
+            for impl, params in impls.items():
+                assert ops.tuned_overrides(op, impl) == dict(params)
+                assert ops.active_config(op, impl) == encode_config(params)
+    finally:
+        ops.clear_tuned_configs()
+    assert ops.tuned_overrides("rwkv6_scan", "chunked") == {}
+
+
+def test_default_winner_contributes_no_override():
+    """A store where the hand-picked default wins produces an empty table —
+    nothing to override, nothing to apply."""
+    space = default_spaces()["mamba_scan/chunked"]
+    store = ProfileStore(min_samples=2)
+    for x in (1e-4, 1e-4):
+        store.record(space.op, space.backend, space.sig, x)  # default: fastest
+    for x in (5e-4, 5e-4):
+        store.record(space.op, space.backend, space.sig, x, config="chunk=64")
+    table, details = winners_from_store(store)
+    assert table == {}
+    assert details["mamba_scan/chunked"]["config"] == ""
+
+
+# ---------------------------------------------------------------------------
+# Fleet round trip: tuned config points survive push/pull
+# ---------------------------------------------------------------------------
+
+
+def test_tuned_store_round_trips_through_fleet(tmp_path):
+    from repro.fleet import FleetClient
+
+    store = ProfileStore()
+    _sweep(store)
+    store.set_stamp(git_sha="sha1", chip="chipA")
+    client = FleetClient(str(tmp_path / "fleet"))
+    client.push(store, "sha1", "chipA")
+    pulled = client.pull("sha1", "chipA")
+    assert pulled["match"] == "exact"
+    remote = pulled["store"]
+    for key in ("rwkv6_scan/chunked", "mamba_scan/chunked"):
+        space = default_spaces()[key]
+        assert (remote.best_config(space.op, space.backend, space.sig)
+                == store.best_config(space.op, space.backend, space.sig))
+    # and the pulled store yields the same override table
+    assert winners_from_store(remote)[0] == winners_from_store(store)[0]
+
+
+# ---------------------------------------------------------------------------
+# Consumer side: ops override table, dispatcher config keying, metrics
+# ---------------------------------------------------------------------------
+
+
+def test_scan_chunk_guard_rejects_non_dividing_tuned_value():
+    from repro.kernels import ops
+
+    try:
+        ops.set_tuned_configs({"mamba_scan": {"chunked": {"chunk": 64}}})
+        assert ops._scan_chunk("mamba_scan", "chunked", 128, 256) == 64
+        # T=100 is not divisible by 64: fall back to the caller's chunk
+        assert ops._scan_chunk("mamba_scan", "chunked", 128, 100) == 128
+        # untuned (op, impl) passes the caller's value through
+        assert ops._scan_chunk("rwkv6_scan", "chunked", 32, 256) == 32
+    finally:
+        ops.clear_tuned_configs()
+
+
+def test_tuned_scope_restores_previous_table():
+    from repro.kernels import ops
+
+    ops.set_tuned_configs({"mamba_scan": {"chunked": {"chunk": 32}}})
+    try:
+        with ops.tuned_scope({"mamba_scan": {"chunked": {"chunk": 64}}}):
+            assert ops.tuned_overrides("mamba_scan", "chunked") == {"chunk": 64}
+        assert ops.tuned_overrides("mamba_scan", "chunked") == {"chunk": 32}
+    finally:
+        ops.clear_tuned_configs()
+
+
+def test_dispatch_decision_payload_omits_empty_config():
+    from repro.dispatch.dispatcher import DispatchDecision
+
+    bare = DispatchDecision("op", "be", "s", 1e-3, "static", "static")
+    assert "config" not in bare.payload()
+    tuned = dataclasses.replace(bare, config="chunk=64")
+    assert tuned.payload()["config"] == "chunk=64"
+
+
+def test_dispatcher_keys_samples_by_active_config():
+    from repro.dispatch import DispatchConfig, Dispatcher
+
+    d = Dispatcher(DispatchConfig(policy="profiled", record_events=False))
+    variants = {b: (lambda x: x) for b in d.backends()}
+    configs = {b: "chunk=64" for b in d.backends()}
+    d.dispatch("op", variants, 1.0, sig="s", configs=configs)
+    used = d.decisions[-1].backend
+    assert d.decisions[-1].config == "chunk=64"
+    assert d.store.samples("op", used, "s", "chunk=64") == 1
+    assert d.store.samples("op", used, "s") == 0  # default bucket untouched
+
+
+def test_metrics_sink_derives_tune_series():
+    from repro.metrics import MetricsPlane
+    from repro.trace import TraceCollector
+
+    log = TraceCollector()
+    plane = MetricsPlane(log)
+    _sweep(ProfileStore(), log=log)
+    text = plane.registry.render()
+    assert 'repro_tune_points_total{op="mamba_scan",pruned="true"}' in text
+    assert 'repro_tune_points_total{op="mamba_scan",pruned="false"}' in text
+    assert 'repro_tune_best_speedup{op="rwkv6_scan"}' in text
+
+
+def test_driver_tune_cached_applies_without_sweeping():
+    from repro.dispatch import DispatchConfig, Dispatcher
+    from repro.kernels import ops
+    from repro.tune import driver_tune
+
+    d = Dispatcher(DispatchConfig(policy="profiled"))
+    _sweep(d.store)  # pretend a previous run / fleet pull filled the store
+    try:
+        rec = driver_tune("cached", d, d.log)
+        assert rec["sweep_points"] == 0 and "winners" not in rec
+        assert rec["applied"] >= 1
+        for op, impls in rec["configs"].items():
+            for impl, config in impls.items():
+                assert ops.active_config(op, impl) == config
+    finally:
+        ops.clear_tuned_configs()
